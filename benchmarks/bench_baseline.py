@@ -1,0 +1,32 @@
+"""Paper Figs 3-4: baseline latency + TTFT vs RPS, 8-node (2-instance) and
+16-node (4-instance) clusters, no failures. Validates the saturation knees
+(RPS 3->4 and 6->7) and TPOT ~163/203 ms."""
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_row, run_scenario
+
+HEADER = "bench,cluster,rps,latency_avg,latency_p99,ttft_avg,ttft_p99,tpot_avg,tpot_p99"
+
+
+def main(fast: bool = True):
+    rows = []
+    sweep = {2: ([1, 2, 3, 4, 5] if fast else [1, 2, 3, 4, 5, 6, 7, 8]),
+             4: ([2, 4, 6, 7, 8] if fast else list(range(1, 17)))}
+    arrive, horizon = (400.0, 700.0) if fast else (1200.0, 1800.0)
+    for n_inst, rpss in sweep.items():
+        for rps in rpss:
+            m = run_scenario("standard", n_inst, float(rps), [],
+                             arrive=arrive, horizon=horizon)
+            rows.append(fmt_row("baseline", f"{4*n_inst}-node", rps,
+                                round(m["latency_avg"], 2),
+                                round(m["latency_p99"], 2),
+                                round(m["ttft_avg"], 3),
+                                round(m["ttft_p99"], 3),
+                                round(m["tpot_avg"], 4),
+                                round(m["tpot_p99"], 4)))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

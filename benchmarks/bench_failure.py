@@ -1,0 +1,54 @@
+"""Paper Fig 5 + Table 1: KevlarFlow vs standard fault behaviour under the
+three failure scenarios:
+  1: 8-node (2x4), one node fails
+  2: 16-node (4x4), one node fails
+  3: 16-node (4x4), two nodes fail (two pipelines)
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_row, run_scenario
+
+HEADER = ("bench,scene,rps,mode,latency_avg,ttft_avg,latency_p99,ttft_p99,"
+          "imp_lat,imp_ttft,imp_lat_p99,imp_ttft_p99,retries,migrations")
+
+SCENES = {
+    1: dict(n_instances=2, fail_nodes=[2]),
+    2: dict(n_instances=4, fail_nodes=[2]),
+    3: dict(n_instances=4, fail_nodes=[2, 9]),   # two different pipelines
+}
+
+
+def main(fast: bool = True):
+    rows = []
+    for scene, cfg in SCENES.items():
+        max_rps = 8 if scene == 1 else 16
+        if fast:
+            rpss = [2.0, 4.0] if scene == 1 else [2.0, 7.0]
+        else:
+            rpss = [float(r) for r in range(1, max_rps + 1)]
+        arrive, horizon = (500.0, 900.0) if fast else (1200.0, 1800.0)
+        for rps in rpss:
+            base = run_scenario("standard", cfg["n_instances"], rps,
+                                cfg["fail_nodes"], arrive=arrive,
+                                horizon=horizon)
+            ours = run_scenario("kevlarflow", cfg["n_instances"], rps,
+                                cfg["fail_nodes"], arrive=arrive,
+                                horizon=horizon)
+            rows.append(fmt_row(
+                "failure", scene, rps, "pair",
+                f"{base['latency_avg']:.2f}/{ours['latency_avg']:.2f}",
+                f"{base['ttft_avg']:.2f}/{ours['ttft_avg']:.2f}",
+                f"{base['latency_p99']:.2f}/{ours['latency_p99']:.2f}",
+                f"{base['ttft_p99']:.2f}/{ours['ttft_p99']:.2f}",
+                round(base["latency_avg"] / ours["latency_avg"], 2),
+                round(base["ttft_avg"] / max(ours["ttft_avg"], 1e-3), 1),
+                round(base["latency_p99"] / ours["latency_p99"], 2),
+                round(base["ttft_p99"] / max(ours["ttft_p99"], 1e-3), 1),
+                f"{base['retries']}/{ours['retries']}",
+                f"{base['migrations']}/{ours['migrations']}"))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

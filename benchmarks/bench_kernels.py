@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU; Mosaic on TPU) vs the
+pure-jnp oracle. On CPU the interesting number is the ORACLE path (XLA:CPU)
+— interpret-mode timing measures the Python interpreter, noted as such."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fmt_row
+from repro.kernels.ops import paged_attention, ssd_scan
+from repro.kernels.ref import paged_attention_ref, ssd_scan_ref
+
+HEADER = "bench,name,us_per_call,derived"
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(fast: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    # llama3-8b-ish decode geometry (reduced pool)
+    B, H, K, D, page, pps, P = 8, 32, 8, 128, 16, 16, 160
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((K, P, page, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((K, P, page, D)), jnp.float32)
+    bt = jnp.asarray(rng.choice(P, (B, pps)).astype(np.int32))
+    ln = jnp.full((B,), pps * page, jnp.int32)
+
+    ref_fn = jax.jit(paged_attention_ref)
+    us = _time(ref_fn, q, kp, vp, bt, ln)
+    tokens = int(jnp.sum(ln))
+    rows.append(fmt_row("kernels", "paged_attention_ref_xla_cpu", round(us, 1),
+                        f"{tokens/us:.1f}tok/us"))
+    us2 = _time(lambda *a: paged_attention(*a, interpret=True),
+                q, kp, vp, bt, ln, iters=2)
+    rows.append(fmt_row("kernels", "paged_attention_pallas_interpret",
+                        round(us2, 1), "correctness-path"))
+
+    b, s, h, p, n = 2, 512, 8, 64, 128
+    xdt = jnp.asarray(rng.standard_normal((b, s, h, p)) * .5, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * .3, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b, s, n)) * .3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, s, n)) * .3, jnp.float32)
+    us3 = _time(jax.jit(ssd_scan_ref), xdt, a, Bm, Cm)
+    rows.append(fmt_row("kernels", "ssd_scan_ref_sequential", round(us3, 1),
+                        f"{b*s/us3:.2f}tok/us"))
+    us4 = _time(lambda *z: ssd_scan(*z, chunk=64, interpret=True),
+                xdt, a, Bm, Cm, iters=2)
+    rows.append(fmt_row("kernels", "ssd_scan_pallas_interpret", round(us4, 1),
+                        "correctness-path"))
+    from repro.models.ssm import ssd_chunked
+    us5 = _time(jax.jit(lambda *z: ssd_chunked(*z, chunk=64)), xdt, a, Bm, Cm)
+    rows.append(fmt_row("kernels", "ssd_chunked_xla_cpu", round(us5, 1),
+                        f"chunked-vs-seq speedup {us3/us5:.1f}x"))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,31 @@
+"""Paper Fig 9: runtime overhead of always-on background KV replication
+during failure-free operation (KevlarFlow vs replication-off baseline)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_row, run_scenario
+
+HEADER = "bench,cluster,rps,lat_base,lat_repl,overhead_avg_pct,overhead_p99_pct"
+
+
+def main(fast: bool = True):
+    rows = []
+    sweep = {2: ([1, 2, 3] if fast else [1, 2, 3, 4, 5, 6]),
+             4: ([2, 5] if fast else [1, 2, 4, 6, 8, 10, 12])}
+    for n_inst, rpss in sweep.items():
+        for rps in rpss:
+            base = run_scenario("standard", n_inst, float(rps), [],
+                                arrive=400.0, horizon=800.0)
+            repl = run_scenario("kevlarflow", n_inst, float(rps), [],
+                                arrive=400.0, horizon=800.0)
+            ov = (repl["latency_avg"] / base["latency_avg"] - 1) * 100
+            ovp = (repl["latency_p99"] / base["latency_p99"] - 1) * 100
+            rows.append(fmt_row("overhead", f"{4*n_inst}-node", rps,
+                                round(base["latency_avg"], 2),
+                                round(repl["latency_avg"], 2),
+                                round(ov, 2), round(ovp, 2)))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

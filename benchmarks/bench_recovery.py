@@ -1,0 +1,28 @@
+"""Paper Fig 8: failure recovery time (MTTR) per scenario across RPS, plus
+the standard-behaviour MTTR for the 20x headline."""
+from __future__ import annotations
+
+from benchmarks.bench_failure import SCENES
+from benchmarks.common import emit, fmt_row, run_scenario
+
+HEADER = "bench,scene,rps,mttr_kevlarflow,mttr_standard,speedup"
+
+
+def main(fast: bool = True):
+    rows = []
+    for scene, cfg in SCENES.items():
+        rpss = [2.0] if fast else [1.0, 2.0, 4.0, 6.0, 8.0]
+        for rps in rpss:
+            kf = run_scenario("kevlarflow", cfg["n_instances"], rps,
+                              cfg["fail_nodes"], arrive=400.0, horizon=1100.0)
+            st = run_scenario("standard", cfg["n_instances"], rps,
+                              cfg["fail_nodes"], arrive=400.0, horizon=1100.0)
+            rows.append(fmt_row("recovery", scene, rps,
+                                round(kf["mttr"], 1), round(st["mttr"], 1),
+                                round(st["mttr"] / max(kf["mttr"], 1e-6), 1)))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

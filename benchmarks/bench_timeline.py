@@ -1,0 +1,41 @@
+"""Paper Figs 1/6/7: rolling avg + p99 TTFT over time around a node failure
+(scene 1, RPS 2.0). Emits a time series suitable for plotting."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fmt_row
+from repro.core.system import ServingSystem
+from repro.serving.workload import poisson_workload
+
+HEADER = "bench,mode,t,rolling_ttft_avg,rolling_ttft_p99"
+
+
+def rolling(reqs, t0, t1, win=60.0, step=30.0):
+    out = []
+    done = [r for r in reqs if r.first_token_time >= 0]
+    for t in np.arange(t0, t1, step):
+        sel = [r.ttft for r in done if t - win <= r.first_token_time < t]
+        if sel:
+            out.append((t, float(np.mean(sel)),
+                        float(np.percentile(sel, 99))))
+    return out
+
+
+def main(fast: bool = True):
+    rows = []
+    horizon = 700.0 if fast else 1200.0
+    for mode in ("standard", "kevlarflow"):
+        sys_ = ServingSystem(n_instances=2, mode=mode)
+        work = poisson_workload(2.0, horizon - 150.0, seed=1)
+        sys_.inject_failure(at=200.0, node_id=2)
+        sys_.run_until(horizon, dt=0.1, arrivals=work)
+        for t, avg, p99 in rolling(list(sys_.requests.values()), 60, horizon):
+            rows.append(fmt_row("timeline", mode, int(t),
+                                round(avg, 3), round(p99, 3)))
+    emit(rows, HEADER)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,37 @@
+"""Shared benchmark scaffolding."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core.system import ServingSystem
+from repro.serving.workload import poisson_workload
+
+
+def run_scenario(mode: str, n_instances: int, rps: float,
+                 fail_nodes: List[int], *, arrive: float = 1200.0,
+                 horizon: float = 1800.0, fail_at: float = 300.0,
+                 dt: float = 0.1, seed: int = 1) -> Dict:
+    """One cluster simulation run; returns the paper's metric columns."""
+    sys_ = ServingSystem(n_instances=n_instances, mode=mode)
+    work = poisson_workload(rps, arrive, seed=seed)
+    for node_id in fail_nodes:
+        sys_.inject_failure(at=fail_at, node_id=node_id)
+    sys_.run_until(horizon, dt=dt, arrivals=work)
+    m = sys_.metrics()
+    m["mode"] = mode
+    m["rps"] = rps
+    m["mttr"] = sys_.mttr_events()[0].mttr if sys_.mttr_events() else -1.0
+    return m
+
+
+def fmt_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)
+
+
+def emit(rows: List[str], header: str):
+    print(header)
+    for r in rows:
+        print(r)
+    sys.stdout.flush()

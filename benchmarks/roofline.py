@@ -1,0 +1,112 @@
+"""§Roofline: three-term analysis per (arch x shape x mesh) from the dry-run
+artifacts (artifacts/dryrun*.json produced by repro.launch.dryrun).
+
+  compute    = HLO_FLOPs_per_dev / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_dev / HBM_bw                (819 GB/s)
+  collective = collective_bytes_per_dev / link_bw        (~50 GB/s/link ICI)
+
+HLO numbers are trip-count-corrected per-device costs from
+launch/hlo_cost.py. MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill),
+2*N*B (decode) with N = active params; the ratio MODEL/HLO exposes remat/
+redundancy waste (ratio < 1 on train because remat recompute is useful-but-
+extra; ratio ~1 on clean decode).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link ICI
+
+HEADER = ("bench,arch,shape,mesh,t_compute_us,t_memory_us,t_collective_us,"
+          "bottleneck,model_flops_ratio,note")
+
+
+def model_flops_per_dev(arch: str, shape_name: str, n_dev: int) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        total = 6 * n * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        total = 2 * n * shape.global_batch * shape.seq_len
+    else:
+        total = 2 * n * shape.global_batch
+    return total / n_dev
+
+
+def load_records(paths: Optional[List[str]] = None) -> List[Dict]:
+    paths = paths or sorted(glob.glob("artifacts/dryrun*.json"))
+    seen = {}
+    for p in paths:
+        try:
+            for r in json.load(open(p)):
+                seen[(r["arch"], r["shape"], r["mesh"])] = r
+        except (OSError, json.JSONDecodeError):
+            continue
+    return list(seen.values())
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec["status"] != "ok":
+        return None
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["hlo_bytes"] / HBM_BW
+    t_x = rec["coll_total"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_dev(rec["arch"], rec["shape"], rec["n_devices"])
+    suggestions = {
+        "compute": "more chips / lower-precision matmuls",
+        "memory": "KV quantization, fusion, smaller remat footprint",
+        "collective": "resharding to cut gathers (weights to model-only), "
+                      "overlap collectives with compute",
+    }
+    ratio = mf / max(rec["flops"], 1.0)
+    # batch-1 decode on 256+ chips leaves most devices with sub-µs compute:
+    # the per-device ratio is meaningless there (flagged, not reported)
+    if rec["flops"] < 1e6:
+        ratio = float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "bottleneck": dom,
+        "model_flops_ratio": ratio,
+        "note": suggestions[dom],
+    }
+
+
+def main(fast: bool = True):
+    rows = []
+    recs = load_records()
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if rec["status"] == "skipped":
+            rows.append(",".join(["roofline", rec["arch"], rec["shape"],
+                                  rec["mesh"], "-", "-", "-", "SKIPPED",
+                                  "-", rec["reason"].replace(",", ";")]))
+            continue
+        a = analyze(rec)
+        if a is None:
+            rows.append(",".join(["roofline", rec["arch"], rec["shape"],
+                                  rec["mesh"], "-", "-", "-", "ERROR", "-",
+                                  rec.get("error", "?")[:60].replace(",", ";")]))
+            continue
+        rows.append(",".join([
+            "roofline", a["arch"], a["shape"], a["mesh"],
+            f"{a['t_compute']*1e6:.1f}", f"{a['t_memory']*1e6:.1f}",
+            f"{a['t_collective']*1e6:.1f}", a["bottleneck"],
+            f"{a['model_flops_ratio']:.2f}", a["note"].replace(",", ";")]))
+    print(HEADER)
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

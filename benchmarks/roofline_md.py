@@ -1,0 +1,43 @@
+"""Render the §Roofline markdown table for EXPERIMENTS.md from the dry-run
+artifacts (single-pod baseline rows, per the assignment; multi-pod rows
+prove the pod axis shards and are kept in the JSON)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import analyze, load_records, model_flops_per_dev
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(sec: float) -> str:
+    if sec < 1e-3:
+        return f"{sec*1e6:.0f} µs"
+    if sec < 1.0:
+        return f"{sec*1e3:.1f} ms"
+    return f"{sec:.2f} s"
+
+
+def main(mesh="16x16"):
+    recs = [r for r in load_records() if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    print("| arch | shape | compute | memory | collective | bottleneck | MODEL/HLO | one-line diagnosis |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | *skip* | — | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | {r.get('error','')[:60]} |")
+            continue
+        a = analyze(r)
+        ratio = ("n/a¹" if a["model_flops_ratio"] != a["model_flops_ratio"]
+                 else f"{a['model_flops_ratio']:.2f}")
+        print(f"| {a['arch']} | {a['shape']} | {fmt_t(a['t_compute'])} | "
+              f"{fmt_t(a['t_memory'])} | {fmt_t(a['t_collective'])} | "
+              f"**{a['bottleneck']}** | {ratio} | "
+              f"{a['note']} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived``-style CSV sections per bench. --full
+sweeps every RPS point the paper uses (slow on 1 CPU core); the default
+fast mode covers the representative points."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (bench_ablation, bench_baseline, bench_failure,
+                            bench_kernels, bench_overhead, bench_recovery,
+                            bench_timeline, roofline)
+    benches = {
+        "baseline": bench_baseline.main,     # Figs 3-4
+        "failure": bench_failure.main,       # Fig 5 + Table 1
+        "recovery": bench_recovery.main,     # Fig 8
+        "overhead": bench_overhead.main,     # Fig 9
+        "timeline": bench_timeline.main,     # Figs 1/6/7
+        "ablation": bench_ablation.main,     # beyond-paper: per-mechanism
+        "kernels": bench_kernels.main,
+        "roofline": roofline.main,           # §Roofline from dry-run
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+    for name, fn in benches.items():
+        t0 = time.time()
+        print(f"\n===== bench: {name} =====")
+        try:
+            fn(fast=fast)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"bench {name} FAILED: {type(e).__name__}: {e}")
+        print(f"===== {name} done in {time.time()-t0:.0f}s =====")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the three KevlarFlow mechanisms in ~60 seconds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.system import ServingSystem
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request
+from repro.serving.workload import poisson_workload
+
+
+def real_compute_failover():
+    """Mechanism 3 on real JAX compute: kill an instance mid-decode and the
+    replicated KV lets requests continue byte-identically."""
+    print("=== real-compute failover (reduced llama3-8b) ===")
+    cfg = get_config("llama3-8b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=96), n_instances=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt_len=12, max_new_tokens=24, arrival_time=0.0,
+                    prompt_tokens=rng.integers(1, cfg.vocab_size, 12).tolist())
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    victims = list(eng.instances[0].requests)
+    resumed = eng.fail_instance(0)
+    eng.run(2000)
+    print(f"  instance 0 killed mid-decode; victims={victims}, "
+          f"seamlessly resumed={resumed}")
+    print(f"  completed {len([r for r in reqs if r.output_tokens])} / 6, "
+          f"retries={sum(r.n_retries for r in reqs)}, "
+          f"migrations={sum(r.n_migrations for r in reqs)}")
+
+
+def cluster_failure_comparison():
+    """Mechanisms 1+2 at cluster scale: KevlarFlow vs standard behaviour."""
+    print("\n=== cluster failure (2x4 pipeline group, RPS 2, 1 node dies) ===")
+    for mode in ("standard", "kevlarflow"):
+        sys_ = ServingSystem(n_instances=2, mode=mode)
+        sys_.inject_failure(at=120.0, node_id=2)
+        sys_.run_until(800.0, dt=0.1,
+                       arrivals=poisson_workload(2.0, 450.0, seed=1))
+        m = sys_.metrics()
+        ev = sys_.injector.events[0]
+        mttr = ev.mttr if ev.mttr >= 0 else sys_.clock.now() - ev.at
+        print(f"  {mode:11s}: MTTR={mttr:6.1f}s{'' if ev.mttr>=0 else '+ (still down)'}  "
+              f"latency={m['latency_avg']:7.2f}s  ttft={m['ttft_avg']:6.2f}s  "
+              f"retries={m['retries']}  migrations={m['migrations']}")
+
+
+def main():
+    real_compute_failover()
+    cluster_failure_comparison()
+    print("\nSee benchmarks/ for the full paper-figure reproductions.")
+
+
+if __name__ == "__main__":
+    main()

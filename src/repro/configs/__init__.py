@@ -1,0 +1,31 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned architecture."""
+from repro.configs.base import (
+    ARCH_TYPES, INPUT_SHAPES, InputShape, ModelConfig, shape_applicable,
+)
+
+from repro.configs import (
+    qwen1_5_0_5b, mamba2_130m, recurrentgemma_9b, yi_9b, qwen1_5_32b,
+    internvl2_76b, mixtral_8x7b, deepseek_67b, dbrx_132b, hubert_xlarge,
+    llama3_8b,
+)
+
+_REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen1_5_0_5b, mamba2_130m, recurrentgemma_9b, yi_9b, qwen1_5_32b,
+        internvl2_76b, mixtral_8x7b, deepseek_67b, dbrx_132b, hubert_xlarge,
+        llama3_8b,
+    )
+}
+
+ASSIGNED = [n for n in _REGISTRY if n != "llama3-8b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    return sorted(_REGISTRY)

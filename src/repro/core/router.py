@@ -1,0 +1,50 @@
+"""Load balancer + dynamic traffic rerouting (paper Sec 3.2 mechanism #2).
+
+Normal operation: requests are distributed evenly (round-robin) across
+serving instances, as in the paper's evaluation setup. Under partial
+failure, *instance-level* rerouting is implicit — a DEGRADED instance keeps
+serving through its patched pipeline — and *request-level* rerouting moves
+work off OFFLINE instances (standard fault behaviour) or pauses it briefly
+during communicator re-form (KevlarFlow)."""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+from repro.core.cluster import InstanceState, LoadBalancerGroup, PipelineInstance
+from repro.serving.request import Request, RequestState
+
+
+class LoadBalancer:
+    def __init__(self, group: LoadBalancerGroup):
+        self.group = group
+        self._rr = 0
+
+    def submit(self, req: Request):
+        """Route a new request to a serving instance (round-robin). New
+        traffic avoids RECOVERING instances — they resume their in-flight
+        work after the re-form, but fresh requests go to live pipelines."""
+        targets = [i for i in self.group.instances
+                   if i.state in (InstanceState.HEALTHY, InstanceState.DEGRADED)]
+        if not targets:
+            targets = [i for i in self.group.instances
+                       if i.state == InstanceState.RECOVERING] or self.group.instances
+        inst = targets[self._rr % len(targets)]
+        self._rr += 1
+        inst.waiting.append(req)
+        req.instance_id = inst.instance_id
+
+    def drain_instance(self, inst: PipelineInstance) -> List[Request]:
+        """Pull every request off an instance (offline path). Running
+        requests are restarted by the caller per the fault policy."""
+        out = list(inst.running) + list(inst.waiting)
+        inst.running.clear()
+        inst.waiting.clear()
+        return out
+
+    def requeue(self, reqs: List[Request]):
+        for r in reqs:
+            self.submit(r)
+
+    def queue_depth(self) -> int:
+        return sum(len(i.waiting) for i in self.group.instances)

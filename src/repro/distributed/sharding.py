@@ -1,0 +1,182 @@
+"""Divisibility-aware auto-sharding rules for params, optimizer state,
+activations, and decode caches on the production mesh.
+
+Layout summary (DESIGN.md; exercised by launch/dryrun.py):
+
+  * weights (2D+): last dim -> "model" when divisible, a leading non-layer
+    dim -> "data" when divisible (FSDP x TP hybrid). Stacked-layer leading
+    axes (scanned) are never sharded. Fallback = replicate the offending
+    dim — correctness over cleverness; the roofline table shows the cost.
+  * batch/token inputs: batch -> ("pod","data") on the multi-pod mesh.
+  * decode KV caches (L,B,C,K,D): batch -> data axes, cache seq -> "model".
+    KV-head counts (1..40) rarely divide the model axis, sequence always
+    does; softmax/contraction over the sharded seq dim lowers to
+    all-reduces, which GSPMD handles.
+  * recurrent states (SSM / RG-LRU): batch -> data, width -> "model" when
+    divisible; states are small.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+PROFILES = ("baseline", "serve_model_only", "expert_parallel", "pure_dp")
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, stacked_layers: bool,
+               profile: str = "baseline") -> P:
+    """Spec for one parameter tensor. ``stacked_layers``: leading dim is the
+    scanned layer axis (never sharded).
+
+    Profiles (§Perf hillclimb; EXPERIMENTS.md):
+      baseline         — FSDP x TP hybrid: last dim -> model, an earlier dim
+                         -> data. Memory-optimal, but serving pays a weight
+                         all-gather over `data` every step.
+      serve_model_only — weights sharded over `model` only, replicated over
+                         data: zero weight collectives at decode (weights
+                         must fit HBM/16 per chip).
+      expert_parallel  — MoE expert stacks (L,E,d,f): E -> model (classic
+                         expert parallelism; dispatch becomes an all-to-all
+                         of token activations instead of weight gathers);
+                         non-expert weights follow serve_model_only... with
+                         baseline fallback when E doesn't divide.
+      pure_dp          — everything replicated (tiny models: grads all-reduce
+                         once instead of per-layer gathers).
+    """
+    nd = len(shape)
+    start = 1 if stacked_layers and nd >= 2 else 0
+    dims = list(range(start, nd))
+    spec: list = [None] * nd
+    if not dims:
+        return P()
+    if profile == "pure_dp":
+        return P(*spec)
+    is_expert = "experts" in path
+    if profile == "expert_parallel" and is_expert and nd - start == 3:
+        e_dim, d_dim = dims[0], dims[1]
+        if _div(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"
+            if _div(shape[d_dim], mesh, "data") and \
+                    shape[d_dim] >= axis_size(mesh, "data"):
+                spec[d_dim] = "data"
+            return P(*spec)
+        # fall through to baseline rules if E is indivisible
+    last = dims[-1]
+    if _div(shape[last], mesh, "model") and shape[last] >= axis_size(mesh, "model"):
+        spec[last] = "model"
+    if profile in ("serve_model_only", "expert_parallel"):
+        return P(*spec)
+    for d in dims[:-1]:
+        if spec[d] is None and _div(shape[d], mesh, "data") and \
+                shape[d] >= axis_size(mesh, "data") and shape[d] > 8:
+            spec[d] = "data"
+            break
+    # 1D / leftover: try model on last if unassigned, else replicate
+    if spec[last] is None and nd - start == 1 and \
+            _div(shape[last], mesh, "model") and \
+            shape[last] >= 4 * axis_size(mesh, "model"):
+        spec[last] = "model"
+    return P(*spec)
+
+
+def params_shardings(params_shape, mesh: Mesh, profile: str = "baseline"):
+    """Tree of NamedShardings matching an eval_shape'd params tree."""
+    def one(path, leaf):
+        keys = tuple(_seg(p) for p in path)
+        stacked = "layers" in keys
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh, stacked,
+                                              profile))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def batch_shardings(batch_shape, mesh: Mesh, profile: str = "baseline"):
+    # pure_dp: batch spreads over EVERY mesh axis (the model axis carries no
+    # weights, so it becomes extra data parallelism)
+    dp = tuple(mesh.axis_names) if profile == "pure_dp" else data_axes(mesh)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if leaf.shape and _div(leaf.shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, arch_type: str):
+    """Decode-state tree sharding, explicit per family:
+
+      dense/moe/vlm:  k/v (L,B,C,K,D), scales (L,B,C,K,1)
+                        -> (None, data, model@C, None, None)
+      ssm:            conv (L,B,W-1,Cdim) -> (None, data, None, model@Cdim)
+                      ssm  (L,B,H,P,N)    -> (None, data, None, None, model@N)
+      hybrid:         h (B,w) -> (data, model@w); conv (B,3,w) -> (data,None,model@w)
+                      k/v (B,cap,K,D) -> (data, model@cap, None, None)
+    """
+    dp = data_axes(mesh)
+
+    def mdl(dim: int, min_per_shard: int = 1) -> Optional[str]:
+        m = axis_size(mesh, "model")
+        return "model" if dim % m == 0 and dim >= m * min_per_shard else None
+
+    def one(path, leaf):
+        keys = tuple(_seg(p) for p in path)
+        shape = leaf.shape
+        name = keys[-1] if keys else ""
+        if arch_type in ("dense", "moe", "vlm"):
+            bspec = dp if _div(shape[1], mesh, dp) else None
+            return NamedSharding(mesh, P(None, bspec, mdl(shape[2]), None, None))
+        if arch_type == "ssm":
+            bspec = dp if _div(shape[1], mesh, dp) else None
+            if name == "conv":
+                return NamedSharding(mesh, P(None, bspec, None, mdl(shape[3])))
+            return NamedSharding(mesh, P(None, bspec, None, None, mdl(shape[4])))
+        if arch_type == "hybrid":
+            bspec = dp if _div(shape[0], mesh, dp) else None
+            if name == "h":
+                return NamedSharding(mesh, P(bspec, mdl(shape[1])))
+            if name == "conv":
+                return NamedSharding(mesh, P(bspec, None, mdl(shape[2])))
+            return NamedSharding(mesh, P(bspec, mdl(shape[1]), None, None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

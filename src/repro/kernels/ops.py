@@ -1,0 +1,37 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` auto-selects: real Mosaic lowering on TPU, interpret mode on
+CPU (the kernel body runs in Python/XLA for correctness validation — this
+container's path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    interpret: bool | None = None):
+    """Decode attention over a block-paged KV pool. See kernel docstring."""
+    if interpret is None:
+        interpret = _default_interpret()
+    assert q.ndim == 3 and k_pages.ndim == 4
+    assert q.shape[1] % k_pages.shape[0] == 0, "H must be a multiple of K"
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xdt, a, B, C, chunk: int = 64, interpret: bool | None = None):
+    """Mamba-2 chunked SSD scan. See kernel docstring."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd.ssd_scan(xdt, a, B, C, chunk=chunk, interpret=interpret)

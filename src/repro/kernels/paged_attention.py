@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: decode attention over a block-paged KV pool.
+
+This is the compute hot-spot fed by KevlarFlow's block-replicated KV cache:
+the same (K, pages, page_size, D) pool layout is the unit of background
+replication, so a migrated request's pages are consumed here unchanged.
+
+TPU design (DESIGN.md hardware adaptation):
+  * grid = (batch, kv_head, pages_per_seq); the page loop is the minor
+    (sequential) grid dimension, so flash-decoding statistics (m, l, acc)
+    live in VMEM scratch across iterations.
+  * the block table is a scalar-prefetch operand — Mosaic reads the page id
+    *before* issuing the HBM->VMEM DMA for the K/V page, which is how a
+    "gather" becomes a sequence of dense page-sized DMAs on TPU (no
+    warp-level gather exists here, unlike the CUDA original).
+  * page_size x head_dim blocks are chosen to be MXU/VREG aligned
+    (page=16|32|64, D=64|128|256).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref,            # scalar prefetch
+            q_ref, k_ref, v_ref,        # VMEM inputs
+            o_ref,                      # VMEM output
+            m_ref, l_ref, acc_ref):     # VMEM scratch
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    page = k_ref.shape[0]
+    rep = q_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                     # (rep, D)
+    k = k_ref[...].astype(jnp.float32)                     # (page, D)
+    v = v_ref[...].astype(jnp.float32)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask tokens beyond this sequence's length
+    pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (rep, page), 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                                  # (rep, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                        # (rep, 1)
+    p = jnp.exp(s - m_new)                                 # (rep, page)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    *, interpret: bool = False):
+    """q: (B, H, D); k_pages/v_pages: (K, P, page, D);
+    block_tables: (B, pages_per_seq) int32; lengths: (B,) int32.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    kheads, n_phys, page, _ = k_pages.shape
+    rep = h // kheads
+    pages_per_seq = block_tables.shape[1]
+    qr = q.reshape(b, kheads, rep, d)
+
+    grid = (b, kheads, pages_per_seq)
+
+    def q_map(b_, k_, i_, bt, ln):
+        return (b_, k_, 0, 0)
+
+    def kv_map(b_, k_, i_, bt, ln):
+        return (k_, bt[b_, i_], 0, 0)
+
+    def o_map(b_, k_, i_, bt, ln):
+        return (b_, k_, 0, 0)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, None, rep, d), q_map),
+                pl.BlockSpec((None, None, page, d), kv_map),
+                pl.BlockSpec((None, None, page, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((None, None, rep, d), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((rep, LANES), jnp.float32),   # m
+                pltpu.VMEM((rep, LANES), jnp.float32),   # l
+                pltpu.VMEM((rep, d), jnp.float32),       # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kheads, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qr, k_pages, v_pages)
+    return out.reshape(b, h, d)

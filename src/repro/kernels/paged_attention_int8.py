@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: decode attention over an INT8-quantized block-paged
+KV pool (per-token, per-kv-head symmetric scales) — the kernel-level
+counterpart of the §Perf int8-KV optimization: halves the HBM read per
+decode step AND halves KevlarFlow's replication bandwidth per block.
+
+Same grid/scalar-prefetch design as paged_attention.py; dequantization
+happens in VMEM right after the page DMA (int8 page + bf16 scales), so HBM
+sees only the quantized bytes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref,
+            q_ref, k_ref, ks_ref, v_ref, vs_ref,
+            o_ref,
+            m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    page = k_ref.shape[0]
+    rep = q_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                       # (rep, D)
+    # dequantize in VMEM: (page, D) int8 * (page, 1) scale
+    k = k_ref[...].astype(jnp.float32) * ks_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32) * vs_ref[...].astype(jnp.float32)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (rep, page), 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
+                         block_tables, lengths, *, interpret: bool = False):
+    """q: (B, H, D) float; k/v_pages: (K, P, page, D) int8;
+    k/v_scales: (K, P, page, 1) bf16/f32; block_tables: (B, pages) int32;
+    lengths: (B,) int32. Returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    kheads, n_phys, page, _ = k_pages.shape
+    rep = h // kheads
+    pages_per_seq = block_tables.shape[1]
+    qr = q.reshape(b, kheads, rep, d)
+
+    def q_map(b_, k_, i_, bt, ln):
+        return (b_, k_, 0, 0)
+
+    def kv_map(b_, k_, i_, bt, ln):
+        return (k_, bt[b_, i_], 0, 0)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kheads, pages_per_seq),
+            in_specs=[
+                pl.BlockSpec((None, None, rep, d), q_map),
+                pl.BlockSpec((None, None, page, d), kv_map),
+                pl.BlockSpec((None, None, page, 1), kv_map),
+                pl.BlockSpec((None, None, page, d), kv_map),
+                pl.BlockSpec((None, None, page, 1), kv_map),
+            ],
+            out_specs=pl.BlockSpec((None, None, rep, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((rep, LANES), jnp.float32),
+                pltpu.VMEM((rep, LANES), jnp.float32),
+                pltpu.VMEM((rep, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kheads, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qr, k_pages, k_scales, v_pages, v_scales)
+    return out.reshape(b, h, d)
+
+
+def quantize_pages(pages):
+    """(K, P, page, D) float -> (int8 pages, scales (K,P,page,1))."""
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=-1, keepdims=True)
+    scales = amax / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(pages.astype(jnp.float32) / scales), -127, 127)
+    return q.astype(jnp.int8), scales.astype(jnp.float32)

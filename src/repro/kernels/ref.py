@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Decode attention over a block-paged KV pool.
+
+    q:            (B, H, D)            one query token per sequence
+    k_pages/v_pages: (K, P, page, D)   pool: kv-head major, P physical pages
+    block_tables: (B, pages_per_seq) int32 physical page per logical page
+    lengths:      (B,) int32           valid tokens per sequence
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    kheads, _, page, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    rep = h // kheads
+    out = []
+    for i in range(b):
+        # gather this sequence's KV (pages_per_seq*page, K, D)
+        ki = k_pages[:, block_tables[i]]          # (K, pages, page, D)
+        vi = v_pages[:, block_tables[i]]
+        ki = ki.reshape(kheads, pages_per_seq * page, d)
+        vi = vi.reshape(kheads, pages_per_seq * page, d)
+        kq = jnp.repeat(ki, rep, axis=0)          # (H, S, D)
+        vq = jnp.repeat(vi, rep, axis=0)
+        s = jnp.einsum("hd,hsd->hs", q[i].astype(jnp.float32),
+                       kq.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+        mask = jnp.arange(pages_per_seq * page) < lengths[i]
+        s = jnp.where(mask[None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out.append(jnp.einsum("hs,hsd->hd", p, vq.astype(jnp.float32)))
+    return jnp.stack(out).astype(q.dtype)
+
+
+def ssd_scan_ref(xdt, a, B, C, h0=None):
+    """Naive sequential SSD recurrence (independent of the chunked form).
+
+    xdt: (b, s, h, p); a: (b, s, h) log decays; B, C: (b, s, n).
+    Returns (y (b,s,h,p), h_final (b,h,p,n)).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, t):
+        xt = xdt[:, t].astype(jnp.float32)          # (b,h,p)
+        at = jnp.exp(a[:, t].astype(jnp.float32))   # (b,h)
+        Bt = B[:, t].astype(jnp.float32)            # (b,n)
+        Ct = C[:, t].astype(jnp.float32)
+        new = carry * at[..., None, None] + \
+            xt[..., None] * Bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", new, Ct)
+        return new, y
+
+    h_final, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def paged_attention_int8_ref(q, k_pages, k_scales, v_pages, v_scales,
+                             block_tables, lengths):
+    """Oracle for the int8 kernel: dequantize then run the float oracle."""
+    k = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)
+    v = v_pages.astype(jnp.float32) * v_scales.astype(jnp.float32)
+    return paged_attention_ref(q.astype(jnp.float32), k, v,
+                               block_tables, lengths).astype(q.dtype)

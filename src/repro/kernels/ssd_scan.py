@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan [arXiv:2405.21060].
+
+TPU mapping (DESIGN.md hardware adaptation): the SSD form is exactly what
+the MXU wants — the intra-chunk term is a (Q x Q) masked-decay "attention"
+computed with three small matmuls, and the inter-chunk recurrence is a
+(P x N) state carried in VMEM scratch across the sequential minor grid
+dimension (chunks). The CUDA original streams chunks through shared memory
+with warp specialization; here each chunk is one grid step whose operands
+are page-aligned HBM->VMEM DMAs scheduled by Mosaic.
+
+Grid: (batch, heads, n_chunks). Per step the kernel consumes
+x (Q, P) [pre-multiplied by dt], a (Q,) log-decays, B/C (Q, N) and emits
+y (Q, P); the final state (P, N) is written on the last chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref,      # VMEM in
+            y_ref, hf_ref,                   # VMEM out
+            state_ref):                      # VMEM scratch (P, N)
+    c_idx = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+    q = x_ref.shape[0]
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (Q, P)
+    a = a_ref[...].astype(jnp.float32)            # (Q, 1) log decay
+    B = b_ref[...].astype(jnp.float32)            # (Q, N)
+    C = c_ref[...].astype(jnp.float32)            # (Q, N)
+
+    a_cum = jnp.cumsum(a, axis=0)                 # (Q, 1)
+    # decay matrix L[i,j] = exp(sum_{j+1..i} a_k) = exp(cum_i - cum_j), i>=j
+    iot = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    Lmat = jnp.where(iot >= jot, jnp.exp(a_cum - a_cum.T), 0.0)
+
+    # intra-chunk: y_diag = ((C @ B^T) * L) @ x        (MXU x2)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    y_diag = jax.lax.dot_general(cb * Lmat, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # contribution of the entering state: y_off = (C @ state^T) * exp(cum)
+    state = state_ref[...]                        # (P, N)
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q,P)
+    y_ref[...] = (y_diag + y_off * jnp.exp(a_cum)).astype(y_ref.dtype)
+
+    # state update: state' = exp(cum_Q) * state + sum_q exp(cum_Q-cum_q) x_q B_q^T
+    total = a_cum[-1:, :]                         # (1,1)
+    decay_states = jnp.exp(total - a_cum)         # (Q,1)
+    upd = jax.lax.dot_general(x * decay_states, B, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (P,N)
+    state_ref[...] = state * jnp.exp(total) + upd
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finish():
+        hf_ref[...] = state_ref[...].astype(hf_ref.dtype)
+
+
+def ssd_scan(xdt, a, B, C, *, chunk: int = 64, interpret: bool = False):
+    """xdt: (b, s, h, p); a: (b, s, h); B, C: (b, s, n).
+    Returns (y (b,s,h,p) f32, h_final (b,h,p,n) f32). s % chunk == 0."""
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    c = s // chunk
+    xc = xdt.transpose(0, 2, 1, 3).reshape(b, h, c, chunk, p)
+    ac = a.transpose(0, 2, 1).reshape(b, h, c, chunk, 1)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+
+    grid = (b, h, c)
+    y, hf = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, None, chunk, p),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((None, None, None, chunk, 1),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((None, None, chunk, n),
+                         lambda b_, h_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((None, None, chunk, n),
+                         lambda b_, h_, c_: (b_, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, None, chunk, p),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((None, None, p, n),
+                         lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, chunk, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xc, ac, Bc, Cc)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    return y, hf

@@ -1,0 +1,227 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape) on the production meshes, extract memory/cost/collective stats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out artifacts/dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+# (no `from __future__` here — it would have to come before the os.environ.)
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, shape_applicable
+from repro.distributed import sharding as sh
+from repro.launch import hlo_cost
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import make_train_step
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def build_lowerable(cfg, shape, mesh, profile: str = "baseline"):
+    """Returns (fn, example_args tree of ShapeDtypeStructs w/ shardings).
+    ``profile`` selects the sharding scheme (distributed/sharding.py) —
+    the A/B lever for the §Perf hillclimb."""
+    q_chunk = 512 if shape.seq_len >= 4096 else 256
+    if shape.kind == "train":
+        ocfg = OptimizerConfig()
+        step = make_train_step(cfg, ocfg, q_chunk=q_chunk, remat=True)
+        pshape = sp.params_struct(cfg)
+        pshard = sh.params_shardings(pshape, mesh, profile)
+        params = jax.tree.map(
+            lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+            pshape, pshard)
+        oshape = sp.opt_state_struct(pshape)
+        opt = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=NamedSharding(mesh, P()) if s.ndim == 0 else None),
+            oshape)
+        # m/v shard exactly like their param
+        opt = opt._replace(
+            m=jax.tree.map(lambda s, d: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=d), oshape.m, pshard),
+            v=jax.tree.map(lambda s, d: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=d), oshape.v, pshard))
+        bshape = sp.input_specs(cfg, shape)
+        bshard = sh.batch_shardings(bshape, mesh, profile)
+        batch = jax.tree.map(
+            lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+            bshape, bshard)
+        return step, (params, opt, batch), {}
+
+    pshape = sp.params_struct(cfg)
+    pshard = sh.params_shardings(pshape, mesh, profile)
+    params = jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        pshape, pshard)
+
+    if shape.kind == "prefill":
+        bshape = sp.input_specs(cfg, shape)
+        bshard = sh.batch_shardings(bshape, mesh, profile)
+        batch = jax.tree.map(
+            lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+            bshape, bshard)
+
+        if cfg.arch_type == "audio":
+            def fn(p, b):
+                from repro.models import encoder
+                return encoder.forward(cfg, p, b["frame_embeds"],
+                                       q_chunk=q_chunk)
+        else:
+            def fn(p, b):
+                logits, cache, _ = api.prefill(cfg, p, b, q_chunk=q_chunk)
+                return logits, cache
+        return fn, (params, batch), {}
+
+    # decode
+    ins = sp.input_specs(cfg, shape)
+    cshard = sh.cache_shardings(ins["cache"], mesh, cfg.arch_type)
+    cache = jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        ins["cache"], cshard)
+    dp = sh.data_axes(mesh)
+    batch_div = ins["token"].shape[0] % sh.axis_size(mesh, dp) == 0
+    token = jax.ShapeDtypeStruct(
+        ins["token"].shape, ins["token"].dtype,
+        sharding=NamedSharding(mesh, P(dp) if batch_div else P()))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    seq_len = shape.seq_len
+
+    def fn(p, token, cache, pos):
+        return api.decode_step(cfg, p, token, cache, pos, seq_len=seq_len)
+
+    return fn, (params, token, cache, pos), {"donate_argnums": (2,)}
+
+
+# --------------------------------------------------------------------------
+# one dry-run
+# --------------------------------------------------------------------------
+
+def dry_run_one(arch: str, shape_name: str, multi_pod: bool = False,
+                verbose: bool = True, profile: str = "baseline",
+                kv_dtype: Optional[str] = None,
+                seq_hint: bool = False) -> Dict[str, Any]:
+    import dataclasses as _dc
+    from repro.models import layers as _L
+    cfg = get_config(arch)
+    if kv_dtype:
+        cfg = _dc.replace(cfg, kv_dtype=kv_dtype)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "profile": profile,
+                           "kv_dtype": kv_dtype or cfg.kv_dtype}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec["seq_hint"] = seq_hint
+    try:
+        fn, args, jit_kw = build_lowerable(cfg, shape, mesh, profile)
+        with mesh, _L.shard_hints("model" if seq_hint else None):
+            lowered = jax.jit(fn, **jit_kw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            agg = hlo_cost.aggregate(compiled.as_text())
+        n_dev = mesh.size
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            # raw XLA numbers (while bodies counted ONCE — see hlo_cost.py)
+            xla_flops=float(cost.get("flops", -1)),
+            xla_bytes=float(cost.get("bytes accessed", -1)),
+            # trip-count-corrected per-device totals
+            flops=agg["flops"],
+            hlo_bytes=agg["bytes"],
+            collective_bytes={k[5:]: v for k, v in agg.items()
+                              if k.startswith("coll_")},
+            coll_total=agg["coll_bytes"],
+            argument_bytes=int(mem.argument_size_in_bytes),
+            output_bytes=int(mem.output_size_in_bytes),
+            temp_bytes=int(mem.temp_size_in_bytes),
+            n_devices=n_dev,
+        )
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} x {rec['mesh']}: "
+                  f"flops/dev={rec['flops']:.3g} bytes/dev={rec['hlo_bytes']:.3g} "
+                  f"coll/dev={rec['coll_total']:.3g} "
+                  f"args={rec['argument_bytes']/n_dev/2**30:.2f}GiB/dev "
+                  f"temp={rec['temp_bytes']/2**30:.2f}GiB "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {rec['mesh']}: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--profile", default="baseline")
+    ap.add_argument("--kv-dtype", default=None)
+    args = ap.parse_args()
+
+    records = []
+    if args.all:
+        archs = ASSIGNED
+        shapes = list(INPUT_SHAPES)
+    elif args.archs:
+        archs = args.archs.split(",")
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                records.append(dry_run_one(arch, shape, multi_pod=mp,
+                                           profile=args.profile,
+                                           kv_dtype=args.kv_dtype))
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skipped (by design), {n_err} errors ===")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

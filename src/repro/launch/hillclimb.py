@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: the three chosen (arch x shape) pairs, iterating
+hypothesis -> change -> re-lower -> re-analyse. Each variant is one
+dry_run_one() call with a different knob; results accumulate in
+artifacts/hillclimb.json and EXPERIMENTS.md §Perf narrates them.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import json
+
+from repro.launch.dryrun import dry_run_one
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def terms(r):
+    return (r["flops"] / PEAK, r["hlo_bytes"] / HBM, r["coll_total"] / LINK)
+
+
+def report(tag, r):
+    if r["status"] != "ok":
+        print(f"{tag:44s} ERROR {r.get('error','')[:80]}")
+        return
+    tc, tm, tx = terms(r)
+    dom = max((tc, "compute"), (tm, "memory"), (tx, "collective"))[1]
+    print(f"{tag:44s} comp={tc*1e3:9.2f}ms mem={tm*1e3:9.2f}ms "
+          f"coll={tx*1e3:9.2f}ms  <-{dom}")
+
+
+def main():
+    results = {}
+
+    print("== PAIR 1: deepseek-67b x decode_32k (paper-representative) ==")
+    r = dry_run_one("deepseek-67b", "decode_32k", verbose=False)
+    results["ds_base"] = r
+    report("baseline (2D FSDPxTP weights)", r)
+    r = dry_run_one("deepseek-67b", "decode_32k", verbose=False,
+                    profile="serve_model_only")
+    results["ds_model_only"] = r
+    report("iter1: serve_model_only weights", r)
+    r = dry_run_one("deepseek-67b", "decode_32k", verbose=False,
+                    profile="serve_model_only", seq_hint=True)
+    results["ds_seq_hint"] = r
+    report("iter2: + seq-sharded attention hint", r)
+    r = dry_run_one("deepseek-67b", "decode_32k", verbose=False,
+                    profile="serve_model_only", seq_hint=True,
+                    kv_dtype="int8")
+    results["ds_int8"] = r
+    report("iter3: + int8 KV cache", r)
+
+    print("\n== PAIR 2: dbrx-132b x decode_32k (worst MODEL/HLO ratio) ==")
+    r = dry_run_one("dbrx-132b", "decode_32k", verbose=False)
+    results["dbrx_base"] = r
+    report("baseline", r)
+    r = dry_run_one("dbrx-132b", "decode_32k", verbose=False,
+                    profile="expert_parallel", seq_hint=True)
+    results["dbrx_ep"] = r
+    report("iter1: expert-parallel + seq hint", r)
+    from repro.models import moe
+    moe.DECODE_CAPACITY_FACTOR = 2.0
+    try:
+        r = dry_run_one("dbrx-132b", "decode_32k", verbose=False,
+                        profile="expert_parallel", seq_hint=True)
+        results["dbrx_cf2"] = r
+        report("iter2: + decode capacity factor 2.0", r)
+    finally:
+        moe.DECODE_CAPACITY_FACTOR = None
+
+    print("\n== PAIR 3: mamba2-130m x train_4k (tiny model over-sharded) ==")
+    r = dry_run_one("mamba2-130m", "train_4k", verbose=False)
+    results["mamba_base"] = r
+    report("baseline", r)
+    r = dry_run_one("mamba2-130m", "train_4k", verbose=False,
+                    profile="pure_dp")
+    results["mamba_dp"] = r
+    report("iter1: pure data-parallel (256-way)", r)
+
+    with open("artifacts/hillclimb.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("\nwritten to artifacts/hillclimb.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input/state: the dry-run
+lowers against these (weak-type-correct, shardable, zero allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import api, vlm
+from repro.training.optimizer import OptState
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_state_struct(params_shape):
+    m = jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params_shape)
+    v = jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params_shape)
+    return OptState(_sds((), jnp.int32), m, v)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for one canonical shape (train batch | prefill prompt |
+    decode token+state). Frontend stubs deliver precomputed embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.arch_type == "audio":
+            return {
+                "frame_embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "targets": _sds((B, S), jnp.int32),
+                "mask": _sds((B, S), jnp.bool_),
+            }
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+        if cfg.arch_type == "vlm":
+            batch["patch_embeds"] = _sds((B, vlm.N_PATCHES, cfg.d_model),
+                                         jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.arch_type == "audio":
+            return {"frame_embeds": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.arch_type == "vlm":
+            batch["patch_embeds"] = _sds((B, vlm.N_PATCHES, cfg.d_model),
+                                         jnp.bfloat16)
+        return batch
+    # decode: ONE new token against a cache of seq_len context
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    return {
+        "token": _sds((B,), jnp.int32),
+        "cache": cache,
+        "pos": _sds((), jnp.int32),
+    }

@@ -1,0 +1,37 @@
+"""HuBERT-style encoder-only audio transformer [arXiv:2106.07447].
+
+The conv feature extractor / mel frontend is STUBBED per the assignment:
+``input_specs()`` delivers precomputed frame embeddings (B, S, d). The
+backbone is a bidirectional transformer (no causal mask, no KV cache, no
+decode step — DESIGN.md records the decode-shape skips).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_params(cfg, rng):
+    assert cfg.is_encoder_only
+    return T.init_params(cfg, rng)
+
+
+def forward(cfg, params, frame_embeds, *, q_chunk: int = 1024, **_):
+    """frame_embeds: (B, S, d) precomputed frontend output -> unit logits."""
+    return T.forward(cfg, params, tokens=None, inputs_embeds=frame_embeds,
+                     q_chunk=q_chunk)
+
+
+def masked_unit_loss(cfg, params, frame_embeds, targets, mask):
+    """HuBERT objective: predict hidden units at masked frames.
+
+    targets: (B, S) int32 unit ids; mask: (B, S) bool (True = masked frame,
+    loss computed there, as in the paper)."""
+    logits = forward(cfg, params, frame_embeds)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll * mask) / denom

@@ -1,0 +1,241 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local (MQA,
+windowed) attention in a 2:1 pattern [arXiv:2402.19427].
+
+The linear recurrence is evaluated with ``jax.lax.associative_scan`` (log-
+depth, TPU-friendly) at train/prefill and as an O(1) recurrent step at
+decode. Replicated transient state = RG-LRU hidden + conv state + the
+bounded local-attention KV window (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+LRU_C = 8.0   # temperature constant from the Griffin paper
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_rglru_layer(rng, cfg, dtype=jnp.bfloat16):
+    d, w = cfg.d_model, cfg.lru_width
+    r = jax.random.split(rng, 6)
+    return {
+        "w_x": L.dense_init(r[0], (d, w), dtype=dtype),       # recurrence branch
+        "w_gate_in": L.dense_init(r[1], (d, w), dtype=dtype),  # gelu gate branch
+        "conv_w": L.dense_init(r[2], (4, w), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": L.dense_init(r[3], (w, w), scale=0.02, dtype=dtype),
+        "wx_gate": L.dense_init(r[4], (w, w), scale=0.02, dtype=dtype),
+        "lambda_p": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": L.dense_init(r[5], (w, d), dtype=dtype),
+        "norm_t": jnp.ones((d,), dtype),
+        "mlp": L.init_mlp(jax.random.fold_in(rng, 7), d, cfg.d_ff, dtype),
+        "norm_mlp": jnp.ones((d,), dtype),
+    }
+
+
+def init_attn_layer(rng, cfg, dtype=jnp.bfloat16):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "attn": L.init_attn(r1, cfg, dtype),
+        "norm_t": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(r2, cfg.d_model, cfg.d_ff, dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_params(cfg, rng):
+    dtype = jnp.dtype(cfg.dtype)
+    r_emb, r_layers = jax.random.split(rng)
+    rngs = jax.random.split(r_layers, cfg.n_layers)
+    layers = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "rglru":
+            layers.append(init_rglru_layer(rngs[i], cfg, dtype))
+        else:
+            layers.append(init_attn_layer(rngs[i], cfg, dtype))
+    return {"embed": L.init_embed(r_emb, cfg, dtype), "layers": layers}
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def _rglru_gates(p, x):
+    """x: (..., w) conv output. Returns (log_a, gated_input) f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["wx_gate"].astype(jnp.float32))
+    log_a = -LRU_C * r * jax.nn.softplus(p["lambda_p"])       # <= 0
+    a_sq = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-6)) * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(p, x, h0=None):
+    """Full-sequence RG-LRU via associative scan. x: (B,S,w)."""
+    log_a, b = _rglru_gates(p, x)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p, x, h):
+    """One-token step. x: (B,w); h: (B,w)."""
+    log_a, b = _rglru_gates(p, x)
+    new_h = jnp.exp(log_a) * h.astype(jnp.float32) + b
+    return new_h, new_h
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _recurrent_block(cfg, p, x, state=None):
+    """state: None | {"h": (B,w), "conv": (B,3,w)}. x: (B,S,d)."""
+    res = x
+    xn = L.rms_norm(x, p["norm_t"], cfg.norm_eps)
+    branch = xn @ p["w_x"]
+    gate = jax.nn.gelu(xn @ p["w_gate_in"])
+    conv_state = state["conv"].astype(branch.dtype) if state else None
+    branch, new_conv = _conv1d(branch, p["conv_w"], p["conv_b"], conv_state)
+    h0 = state["h"] if state else None
+    if x.shape[1] == 1 and state is not None:
+        new_h, out = rglru_step(p, branch[:, 0], state["h"])
+        out = out[:, None]
+    else:
+        out, new_h = rglru_scan(p, branch, h0)
+    y = (out.astype(gate.dtype) * gate) @ p["w_out"]
+    x = res + y
+    h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2)
+    return x, {"h": new_h, "conv": new_conv.astype(jnp.bfloat16)}
+
+
+def _conv1d(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return y + b[None, None], xp[:, -(k - 1):]
+
+
+def _attn_block(cfg, p, x, positions, *, q_chunk=1024, cache=None,
+                pos=None, kv_len=None):
+    res = x
+    h = L.rms_norm(x, p["norm_t"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+    w = cfg.sliding_window
+    if cache is None:
+        o = L.attention(q, k, v, causal=True, window=w,
+                        q_chunk=min(q_chunk, x.shape[1]))
+        new_cache = (k, v)
+    else:
+        cap = cache["k"].shape[1]
+        slot = pos % cap
+        ck = L.kv_cache_update(cache["k"], k, slot)
+        cv = L.kv_cache_update(cache["v"], v, slot)
+        o = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+    x = res + L.attn_out(p["attn"], o)
+    h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# model-level API
+# --------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, *, q_chunk: int = 1024, **_):
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    for p, kind in zip(params["layers"], cfg.layer_kinds()):
+        if kind == "rglru":
+            x, _ = _recurrent_block(cfg, p, x)
+        else:
+            x, _ = _attn_block(cfg, p, x, positions, q_chunk=q_chunk)
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    return L.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg, batch: int, capacity: int = 0, dtype=jnp.bfloat16):
+    """capacity defaults to the local-attention window."""
+    cap = capacity or cfg.sliding_window
+    cache = {}
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "rglru":
+            cache[f"layer_{i}"] = {
+                "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+                "conv": jnp.zeros((batch, 3, cfg.lru_width), jnp.bfloat16),
+            }
+        else:
+            cache[f"layer_{i}"] = {
+                "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+    return cache
+
+
+def prefill(cfg, params, tokens, *, capacity: int = 0, q_chunk: int = 1024, **_):
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    cap = capacity or cfg.sliding_window
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    cache = {}
+    for i, (p, kind) in enumerate(zip(params["layers"], cfg.layer_kinds())):
+        if kind == "rglru":
+            x, st = _recurrent_block(cfg, p, x)
+            cache[f"layer_{i}"] = st
+        else:
+            x, (k, v) = _attn_block(cfg, p, x, positions, q_chunk=q_chunk)
+            keep = min(cap, s)
+            pad = cap - keep
+            cache[f"layer_{i}"] = {
+                "k": _pad(k[:, s - keep:].astype(jnp.bfloat16), pad),
+                "v": _pad(v[:, s - keep:].astype(jnp.bfloat16), pad),
+            }
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+    return logits[:, 0], cache, s
+
+
+def _pad(x, pad):
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def decode_step(cfg, params, token, cache, pos, **_):
+    x = L.embed(params["embed"], token[:, None])
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    new_cache = {}
+    for i, (p, kind) in enumerate(zip(params["layers"], cfg.layer_kinds())):
+        key = f"layer_{i}"
+        if kind == "rglru":
+            x, st = _recurrent_block(cfg, p, x, state=cache[key])
+            new_cache[key] = st
+        else:
+            cap = cache[key]["k"].shape[1]
+            kv_len = jnp.minimum(pos + 1, cap)
+            x, st = _attn_block(cfg, p, x, positions, cache=cache[key],
+                                pos=pos, kv_len=kv_len)
+            new_cache[key] = st
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits[:, 0], new_cache

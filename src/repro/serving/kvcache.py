@@ -1,0 +1,188 @@
+"""Block-paged KV cache pool — the paper's KV representation (Sec 3.2 #3:
+"KevlarFlow uses a block representation of KV cache and replicates it
+block-by-block in the background").
+
+One ``PagedKVPool`` lives on every VirtualNode (for the layer range that
+node owns). Blocks are the unit of allocation, replication, and
+memory-pressure eviction. The pool carries real JAX buffers when the node
+runs real compute (reduced models on CPU), or pure metadata when driven by
+the simulation clock — the allocation/replication logic is identical, which
+is what the tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+try:  # real-buffer mode is optional (sim benchmarks never touch jax)
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+
+@dataclasses.dataclass
+class BlockRef:
+    """A (request, logical block index) -> physical slot mapping entry."""
+    rid: int
+    logical_idx: int
+    slot: int
+    n_filled: int = 0          # tokens currently valid in this block
+    replicated: bool = False   # safely copied to the replica target?
+
+
+class PagedKVPool:
+    """Fixed-size pool of KV blocks with a free list.
+
+    Layout (real mode): k/v arrays of shape
+      (n_layers, n_blocks, page_size, n_kv_heads, head_dim)
+    so one 'block' spans all layers of this node's stage — the natural
+    replication unit (one network message per block per peer).
+    """
+
+    def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
+                 n_kv_heads: int = 0, head_dim: int = 0, real: bool = False,
+                 dtype="bfloat16"):
+        self.n_blocks = n_blocks
+        self.page_size = page_size
+        self.real = real
+        self._free: List[int] = list(range(n_blocks))
+        self._tables: Dict[int, List[BlockRef]] = {}      # rid -> blocks
+        # replica blocks hosted on behalf of peers: (peer_node, rid) -> slots
+        self._replica_tables: Dict[Tuple[int, int], List[BlockRef]] = {}
+        if real:
+            assert jnp is not None
+            shape = (n_layers, n_blocks, page_size, n_kv_heads, head_dim)
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - self.n_free
+
+    def utilization(self) -> float:
+        return self.n_used / self.n_blocks
+
+    def replica_blocks_used(self) -> int:
+        return sum(len(t) for t in self._replica_tables.values())
+
+    # -- primary allocation --------------------------------------------------
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.n_free >= self.blocks_for_tokens(n_tokens)
+
+    def allocate(self, rid: int, n_tokens: int) -> List[BlockRef]:
+        """Allocate blocks for n_tokens; raises MemoryError if full
+        (caller should evict replicas first — the paper's pressure rule)."""
+        need = self.blocks_for_tokens(n_tokens)
+        if need > self.n_free:
+            raise MemoryError(f"pool exhausted: need {need}, free {self.n_free}")
+        table = self._tables.setdefault(rid, [])
+        start = len(table)
+        refs = []
+        remaining = n_tokens
+        for i in range(need):
+            slot = self._free.pop()
+            ref = BlockRef(rid, start + i, slot,
+                           n_filled=min(self.page_size, remaining))
+            remaining -= ref.n_filled
+            table.append(ref)
+            refs.append(ref)
+        return refs
+
+    def append_token(self, rid: int) -> Optional[BlockRef]:
+        """Account one generated token; allocates a new block on overflow.
+        Returns the block that received the token."""
+        table = self._tables.get(rid)
+        if not table or table[-1].n_filled == self.page_size:
+            refs = self.allocate(rid, 1)
+            refs[0].n_filled = 1
+            return refs[0]
+        table[-1].n_filled += 1
+        table[-1].replicated = False     # block changed; needs re-replication
+        return table[-1]
+
+    def table(self, rid: int) -> List[BlockRef]:
+        return self._tables.get(rid, [])
+
+    def n_tokens(self, rid: int) -> int:
+        return sum(ref.n_filled for ref in self.table(rid))
+
+    def free(self, rid: int):
+        for ref in self._tables.pop(rid, []):
+            self._free.append(ref.slot)
+
+    def live_requests(self) -> List[int]:
+        return list(self._tables)
+
+    # -- replica hosting -------------------------------------------------------
+    def host_replica(self, peer: int, rid: int, n_blocks: int) -> bool:
+        """Reserve blocks for a peer's replicated request. Never raises:
+        returns False if there is no headroom (peer will retry / drop)."""
+        if n_blocks > self.n_free:
+            return False
+        refs = []
+        for _ in range(n_blocks):
+            slot = self._free.pop()
+            refs.append(BlockRef(rid, len(refs), slot, n_filled=self.page_size))
+        self._replica_tables.setdefault((peer, rid), []).extend(refs)
+        return True
+
+    def replica_table(self, peer: int, rid: int) -> List[BlockRef]:
+        return self._replica_tables.get((peer, rid), [])
+
+    def drop_replica(self, peer: int, rid: int):
+        for ref in self._replica_tables.pop((peer, rid), []):
+            self._free.append(ref.slot)
+
+    def drop_all_replicas_from(self, peer: int):
+        for key in [k for k in self._replica_tables if k[0] == peer]:
+            self.drop_replica(*key)
+
+    def evict_replicas_for_pressure(self, blocks_needed: int) -> int:
+        """Paper: 'When memory pressure happens, KevlarFlow drops the
+        replicated KV cache'. Evict whole replica tables until enough
+        blocks are free. Returns blocks freed."""
+        freed = 0
+        for key in list(self._replica_tables):
+            if self.n_free >= blocks_needed:
+                break
+            n = len(self._replica_tables[key])
+            self.drop_replica(*key)
+            freed += n
+        return freed
+
+    def promote_replica(self, peer: int, rid: int) -> List[BlockRef]:
+        """Failure path: the replicated request resumes *here* — the hosted
+        replica blocks become this pool's primary blocks for rid."""
+        refs = self._replica_tables.pop((peer, rid), [])
+        assert rid not in self._tables, "rid already live on this node"
+        for i, ref in enumerate(refs):
+            ref.logical_idx = i
+        self._tables[rid] = refs
+        return refs
+
+    # -- real-buffer block IO (used by the real-compute runner + tests) -----
+    def write_block(self, slot: int, k_block, v_block):
+        assert self.real
+        self.k = self.k.at[:, slot].set(k_block)
+        self.v = self.v.at[:, slot].set(v_block)
+
+    def read_block(self, slot: int):
+        assert self.real
+        return self.k[:, slot], self.v[:, slot]
+
+    def copy_block_to(self, other: "PagedKVPool", src_slot: int, dst_slot: int):
+        """One block-replication message (paper's yellow arrow)."""
+        if self.real and other.real:
+            kb, vb = self.read_block(src_slot)
+            other.k = other.k.at[:, dst_slot].set(kb)
+            other.v = other.v.at[:, dst_slot].set(vb)

@@ -1,0 +1,91 @@
+"""Request lifecycle + per-request metrics (TTFT, TPOT, latency)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    MIGRATING = "migrating"     # KevlarFlow: resuming on a replication target
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float
+    prompt_tokens: Optional[list] = None        # real-compute path only
+
+    state: RequestState = RequestState.QUEUED
+    generated: int = 0
+    instance_id: Optional[int] = None
+
+    # metrics (absolute times; -1 = not yet)
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+    n_retries: int = 0
+    n_migrations: int = 0
+    prefill_progress: float = 0.0
+
+    # replication bookkeeping
+    replicated_through: int = 0                 # tokens safely replicated
+    replica_node: Optional[int] = None
+    migrate_pause: float = 0.0                  # remaining migration stall (s)
+
+    output_tokens: Optional[list] = None
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    def restart(self):
+        """Standard fault behaviour: lose all progress, re-queue, re-prefill.
+        TTFT is *not* reset — the user is still waiting on the same request
+        (matches the paper's measurement)."""
+        self.state = RequestState.QUEUED
+        self.generated = 0
+        self.prefill_progress = 0.0
+        self.instance_id = None
+        self.n_retries += 1
+        self.replicated_through = 0
+        if self.output_tokens:
+            self.output_tokens.clear()
+        self.first_token_time = -1.0    # paper: queue spike re-inflates TTFT
+
+
+def summarize(requests: List[Request]):
+    """Aggregate metrics over completed requests (paper Table 1 columns)."""
+    import numpy as np
+
+    done = [r for r in requests if r.state == RequestState.DONE]
+    if not done:
+        return {"n": 0}
+    lat = np.array([r.latency for r in done])
+    ttft = np.array([r.ttft for r in done if r.first_token_time >= 0])
+    tpot = np.array([(r.latency - r.ttft) / max(r.generated, 1) for r in done])
+    return {
+        "n": len(done),
+        "latency_avg": float(lat.mean()),
+        "latency_p99": float(np.percentile(lat, 99)),
+        "ttft_avg": float(ttft.mean()),
+        "ttft_p99": float(np.percentile(ttft, 99)),
+        "tpot_avg": float(tpot.mean()),
+        "tpot_p99": float(np.percentile(tpot, 99)),
+        "retries": sum(r.n_retries for r in requests),
+        "migrations": sum(r.n_migrations for r in requests),
+    }

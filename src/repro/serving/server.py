@@ -1,0 +1,173 @@
+"""OpenAI-compatible HTTP front-end (paper Sec 3.3: "providing an OpenAI-
+compatible server endpoint"). Minimal but real: a threaded stdlib HTTP
+server over RealEngine with a background engine loop, POST /v1/completions
+(+ /health and /admin/fail_instance for failure-injection drills).
+
+  PYTHONPATH=src python -m repro.serving.server --arch llama3-8b --port 8080
+  curl -d '{"prompt_tokens": [1,2,3], "max_tokens": 8}' localhost:8080/v1/completions
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request, RequestState
+
+
+class EngineService:
+    """Background continuous-batching loop around RealEngine."""
+
+    def __init__(self, cfg, ecfg: EngineConfig, n_instances: int = 2):
+        self.engine = RealEngine(cfg, ecfg, n_instances=n_instances)
+        self.cfg = cfg
+        self._lock = threading.Lock()
+        self._next_rid = 0
+        self._events: dict[int, threading.Event] = {}
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop:
+            with self._lock:
+                busy = (self.engine.waiting or
+                        any(i.requests for i in self.engine.instances))
+                if busy:
+                    self.engine.step()
+                done_ids = [r.rid for r in self.engine.done]
+            for rid in done_ids:
+                ev = self._events.get(rid)
+                if ev:
+                    ev.set()
+            if not busy:
+                time.sleep(0.01)
+
+    def submit(self, prompt_tokens, max_tokens: int) -> Request:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = Request(rid=rid, prompt_len=len(prompt_tokens),
+                          max_new_tokens=max_tokens, arrival_time=time.time(),
+                          prompt_tokens=list(prompt_tokens))
+            self._events[rid] = threading.Event()
+            self.engine.submit(req)
+        return req
+
+    def wait(self, req: Request, timeout: float = 120.0) -> bool:
+        return self._events[req.rid].wait(timeout)
+
+    def fail_instance(self, instance_id: int):
+        with self._lock:
+            return self.engine.fail_instance(instance_id)
+
+    def stats(self):
+        with self._lock:
+            return {
+                "instances": [
+                    {"id": i.instance_id, "alive": i.alive,
+                     "active": len(i.requests)}
+                    for i in self.engine.instances],
+                "queued": len(self.engine.waiting),
+                "completed": len(self.engine.done),
+            }
+
+    def shutdown(self):
+        self._stop = True
+        self._thread.join(timeout=2)
+
+
+def make_handler(svc: EngineService):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):  # quiet
+            pass
+
+        def _json(self, code: int, obj):
+            body = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path == "/health":
+                self._json(200, {"status": "ok", **svc.stats()})
+            else:
+                self._json(404, {"error": "not found"})
+
+        def do_POST(self):
+            length = int(self.headers.get("Content-Length", 0))
+            try:
+                payload = json.loads(self.rfile.read(length) or b"{}")
+            except json.JSONDecodeError:
+                self._json(400, {"error": "bad json"})
+                return
+            if self.path == "/v1/completions":
+                toks = payload.get("prompt_tokens")
+                if not toks:
+                    self._json(400, {"error": "prompt_tokens required"})
+                    return
+                max_tokens = int(payload.get("max_tokens", 16))
+                req = svc.submit(toks, max_tokens)
+                if not svc.wait(req):
+                    self._json(504, {"error": "timeout"})
+                    return
+                self._json(200, {
+                    "id": f"cmpl-{req.rid}",
+                    "object": "text_completion",
+                    "model": svc.cfg.name,
+                    "choices": [{
+                        "index": 0,
+                        "token_ids": req.output_tokens,
+                        "finish_reason": "length",
+                    }],
+                    "usage": {
+                        "prompt_tokens": req.prompt_len,
+                        "completion_tokens": len(req.output_tokens or []),
+                    },
+                    "kevlarflow": {"migrations": req.n_migrations,
+                                   "retries": req.n_retries},
+                })
+            elif self.path == "/admin/fail_instance":
+                iid = int(payload.get("instance", 0))
+                resumed = svc.fail_instance(iid)
+                self._json(200, {"failed_instance": iid,
+                                 "seamlessly_resumed": resumed})
+            else:
+                self._json(404, {"error": "not found"})
+
+    return Handler
+
+
+def serve(cfg, ecfg=None, n_instances=2, port=8080):
+    svc = EngineService(cfg, ecfg or EngineConfig(), n_instances)
+    httpd = ThreadingHTTPServer(("127.0.0.1", port), make_handler(svc))
+    return svc, httpd
+
+
+def main():
+    from repro.configs import get_config
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--instances", type=int, default=2)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if cfg.n_params() > 3e8:
+        print(f"{args.arch}: serving the reduced variant on CPU")
+        cfg = cfg.reduced()
+    svc, httpd = serve(cfg, n_instances=args.instances, port=args.port)
+    print(f"KevlarFlow serving {cfg.name} on :{args.port} "
+          f"({args.instances} instances). POST /v1/completions")
+    try:
+        httpd.serve_forever()
+    finally:
+        svc.shutdown()
+
+
+if __name__ == "__main__":
+    main()

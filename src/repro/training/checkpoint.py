@@ -1,0 +1,68 @@
+"""Sharded checkpoint save/restore: msgpack manifest + raw ``.npy`` buffers.
+
+Flat key = '/'.join(pytree path). Works for params + optimizer state.
+(KevlarFlow note: serving-side recovery never touches this path — that is
+the point of the paper; checkpoints exist for the *training* substrate.)"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "arrays": {}}
+    for key, arr in flat.items():
+        fname = key.replace("/", "__") + ".npy"
+        save_arr = arr
+        if arr.dtype.name == "bfloat16":       # no native numpy IO for bf16
+            save_arr = arr.view(np.uint16)
+        np.save(os.path.join(path, fname), save_arr)
+        manifest["arrays"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    import ml_dtypes
+    for key, meta in manifest["arrays"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        flat[key] = arr
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_, leaf in leaves_with_path:
+        key = "/".join(_seg(p) for p in path_)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{key}: ckpt {arr.shape} != model {leaf.shape}"
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]

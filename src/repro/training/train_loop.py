@@ -1,0 +1,69 @@
+"""Training loop substrate: jit'd train_step with remat, metrics, ckpts."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import OptimizerConfig, OptState, init as opt_init, update
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    q_chunk: int = 1024, remat: bool = True):
+    """Returns jit-able train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics). The loss body is rematerialized
+    (checkpointed) so long-sequence training fits HBM — the policy the
+    dry-run lowers with."""
+    loss_fn = functools.partial(api.loss, cfg, q_chunk=q_chunk)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def train_step(params, opt_state: OptState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = update(ocfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+def train(cfg: ModelConfig, dcfg: DataConfig, ocfg: OptimizerConfig,
+          tcfg: TrainerConfig, seed: int = 0,
+          params=None, on_metrics=None) -> Dict[str, Any]:
+    """End-to-end CPU-runnable training driver (examples/train_smoke.py)."""
+    rng = jax.random.PRNGKey(seed)
+    if params is None:
+        params = api.init_params(cfg, rng)
+    opt_state = opt_init(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, q_chunk=min(dcfg.seq_len, 512)))
+    stream = iter(TokenStream(cfg, dcfg))
+    history = []
+    t0 = time.time()
+    for step in range(1, tcfg.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["tok_per_s"] = dcfg.batch_size * dcfg.seq_len * step / (time.time() - t0)
+            history.append(m)
+            if on_metrics:
+                on_metrics(m)
+        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
+            ckpt_lib.save(tcfg.ckpt_dir, {"params": params}, step)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the REAL device count (1 CPU device). Only launch/dryrun.py
+# sets the 512-device flag, per the assignment.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

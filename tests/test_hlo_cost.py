@@ -1,0 +1,76 @@
+"""HLO cost parser: trip counts, dot FLOPs, effective fusion traffic."""
+from repro.launch import hlo_cost as H
+
+SAMPLE = """\
+HloModule jit_fn
+
+%fused_dus (param_0.1: s32[], param_1.1: f32[8,64,32], param_2.1: f32[1,64,32]) -> f32[8,64,32] {
+  %param_1.1 = f32[8,64,32]{2,1,0} parameter(1)
+  %param_2.1 = f32[1,64,32]{2,1,0} parameter(2)
+  %param_0.1 = s32[] parameter(0)
+  %c0 = s32[] constant(0)
+  ROOT %dus = f32[8,64,32]{2,1,0} dynamic-update-slice(%param_1.1, %param_2.1, %param_0.1, %c0, %c0)
+}
+
+%fused_slice (param_0.2: f32[8,64,32], param_1.2: s32[]) -> f32[64,32] {
+  %param_0.2 = f32[8,64,32]{2,1,0} parameter(0)
+  %param_1.2 = s32[] parameter(1)
+  %c1 = s32[] constant(0)
+  %ds = f32[1,64,32]{2,1,0} dynamic-slice(%param_0.2, %param_1.2, %c1, %c1), dynamic_slice_sizes={1,64,32}
+  ROOT %rs = f32[64,32]{1,0} bitcast(%ds)
+}
+
+%body (p: (s32[], f32[64,32], f32[8,64,32])) -> (s32[], f32[64,32], f32[8,64,32]) {
+  %p = (s32[], f32[64,32]{1,0}, f32[8,64,32]{2,1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,32]{1,0} get-tuple-element(%p), index=1
+  %buf = f32[8,64,32]{2,1,0} get-tuple-element(%p), index=2
+  %w = f32[64,32]{1,0} fusion(%buf, %i), kind=kLoop, calls=%fused_slice
+  %y = f32[64,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ag = f32[64,64]{1,0} all-gather(%y), replica_groups={}, dimensions={1}
+  %one = s32[] constant(1)
+  %inext = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,32]{1,0}, f32[8,64,32]{2,1,0}) tuple(%inext, %x, %buf)
+}
+
+%cond (pc: (s32[], f32[64,32], f32[8,64,32])) -> pred[] {
+  %pc = (s32[], f32[64,32]{1,0}, f32[8,64,32]{2,1,0}) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64,32], b: f32[8,64,32]) -> f32[64,32] {
+  %a = f32[64,32]{1,0} parameter(0)
+  %b = f32[8,64,32]{2,1,0} parameter(1)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[64,32]{1,0}, f32[8,64,32]{2,1,0}) tuple(%z, %a, %b)
+  %w8 = (s32[], f32[64,32]{1,0}, f32[8,64,32]{2,1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %out = f32[64,32]{1,0} get-tuple-element(%w8), index=1
+}
+"""
+
+
+def test_trip_count_multiplies_body():
+    agg = H.aggregate(SAMPLE)
+    # dot: 2 * 64*64 * 32 = 262144 flops, x8 trips
+    assert agg["flops"] == 8 * 2 * 64 * 64 * 32
+    # all-gather result 64*64*4 bytes x8
+    assert agg["coll_all_gather"] == 8 * 64 * 64 * 4
+
+
+def test_fusion_dynamic_slice_charged_as_slice():
+    comps, entry, _ = H.parse(SAMPLE)
+    body = comps["body"]
+    # fused_slice reads buf via dynamic-slice: 1*64*32*4 = 8KB, not 64KB
+    # dot traffic: result 64*64*4 + operands 2*(64*32*4)
+    expected_fusion = 1 * 64 * 32 * 4 + 4 + 64 * 32 * 4  # slice + s32 idx + out
+    expected_dot = 64 * 64 * 4 + 2 * 64 * 32 * 4
+    expected_add = 2 * 4                                  # s32 add
+    assert body.bytes == expected_fusion + expected_dot + expected_add
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[8,64,32]{2,1,0}") == 8 * 64 * 32 * 4
+    assert H._shape_bytes("(s32[], bf16[4,4]{1,0})") == 4 + 32
+    assert H._shape_bytes("pred[16]") == 16

@@ -1,0 +1,154 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis, all vs the
+pure-jnp oracles in kernels/ref.py (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import paged_attention, ssd_scan
+from repro.kernels.ref import paged_attention_ref, ssd_scan_ref
+
+
+# --------------------------------------------------------------------------
+# paged attention
+# --------------------------------------------------------------------------
+
+def _paged_case(b, h, kheads, d, page, pps, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    P = pps * b + 3                       # physical pool > logical need
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    kp = jnp.asarray(rng.standard_normal((kheads, P, page, d)), dtype)
+    vp = jnp.asarray(rng.standard_normal((kheads, P, page, d)), dtype)
+    tables = rng.permutation(P)[: b * pps].reshape(b, pps).astype(np.int32)
+    lengths = rng.integers(1, pps * page + 1, b).astype(np.int32)
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("b,h,kheads,d,page,pps", [
+    (1, 4, 4, 64, 16, 2),      # MHA
+    (2, 8, 2, 64, 16, 4),      # GQA 4:1
+    (3, 8, 1, 128, 16, 3),     # MQA
+    (2, 16, 8, 128, 32, 2),    # bigger page
+    (4, 4, 2, 256, 16, 5),     # rg-style head_dim 256
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, h, kheads, d, page, pps, dtype):
+    q, kp, vp, bt, ln = _paged_case(b, h, kheads, d, page, pps, dtype)
+    out = paged_attention(q, kp, vp, bt, ln, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, ln)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 4), rep=st.sampled_from([1, 2, 4]),
+       kheads=st.sampled_from([1, 2, 4]), page=st.sampled_from([8, 16]),
+       pps=st.integers(1, 4), seed=st.integers(0, 10_000))
+def test_paged_attention_hypothesis(b, rep, kheads, page, pps, seed):
+    q, kp, vp, bt, ln = _paged_case(b, rep * kheads, kheads, 64, page, pps,
+                                    jnp.float32, seed)
+    out = paged_attention(q, kp, vp, bt, ln, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_length_masking():
+    """Tokens beyond `length` must not influence the output."""
+    q, kp, vp, bt, ln = _paged_case(2, 4, 2, 64, 16, 3, jnp.float32)
+    ln = jnp.asarray([5, 17], jnp.int32)
+    out1 = paged_attention(q, kp, vp, bt, ln, interpret=True)
+    # poison everything past the valid region of the LAST used page
+    kp2 = kp.at[:, bt[0, 2]].set(1e4)   # page beyond length 5 (pages 0)
+    vp2 = vp.at[:, bt[0, 2]].set(1e4)
+    out2 = paged_attention(q, kp2, vp2, bt, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# SSD scan
+# --------------------------------------------------------------------------
+
+def _ssd_case(b, s, h, p, n, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    xdt = jnp.asarray(rng.standard_normal((b, s, h, p)) * 0.5, dtype)
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)) * 0.3, dtype)
+    C = jnp.asarray(rng.standard_normal((b, s, n)) * 0.3, dtype)
+    return xdt, a, B, C
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 32, 1, 8, 16, 8),
+    (2, 64, 3, 16, 32, 16),
+    (2, 128, 2, 64, 128, 32),   # mamba2-130m head geometry
+    (1, 96, 4, 32, 64, 32),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    xdt, a, B, C = _ssd_case(b, s, h, p, n)
+    y, hf = ssd_scan(xdt, a, B, C, chunk=chunk, interpret=True)
+    yr, hr = ssd_scan_ref(xdt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), nchunks=st.integers(1, 4),
+       chunk=st.sampled_from([8, 16]), h=st.integers(1, 3),
+       seed=st.integers(0, 10_000))
+def test_ssd_scan_hypothesis(b, nchunks, chunk, h, seed):
+    s = nchunks * chunk
+    xdt, a, B, C = _ssd_case(b, s, h, 8, 16, seed)
+    y, hf = ssd_scan(xdt, a, B, C, chunk=chunk, interpret=True)
+    yr, hr = ssd_scan_ref(xdt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_matches_model_impl():
+    """Kernel == models/ssm.py chunked implementation (same algorithm)."""
+    from repro.models.ssm import ssd_chunked
+    xdt, a, B, C = _ssd_case(2, 64, 2, 16, 32)
+    y, hf = ssd_scan(xdt, a, B, C, chunk=16, interpret=True)
+    ym, hm = ssd_chunked(xdt, a, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ym), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hm), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# int8 paged attention
+# --------------------------------------------------------------------------
+
+from repro.kernels.paged_attention_int8 import paged_attention_int8, quantize_pages
+from repro.kernels.ref import paged_attention_int8_ref
+
+
+@pytest.mark.parametrize("b,h,kheads,d,page,pps", [
+    (2, 8, 2, 64, 16, 3),
+    (1, 4, 1, 128, 16, 2),
+    (3, 16, 8, 128, 32, 2),
+])
+def test_paged_attention_int8_sweep(b, h, kheads, d, page, pps):
+    q, kp, vp, bt, ln = _paged_case(b, h, kheads, d, page, pps, jnp.float32)
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    out = paged_attention_int8(q, kq, ks, vq, vs, bt, ln, interpret=True)
+    ref = paged_attention_int8_ref(q, kq, ks, vq, vs, bt, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_int8_quantization_error_bounded():
+    """End-to-end: int8 pool vs float pool output differs by only the
+    quantization noise (small relative to the attention output scale)."""
+    q, kp, vp, bt, ln = _paged_case(2, 8, 2, 64, 16, 4, jnp.float32)
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    out_i8 = paged_attention_int8(q, kq, ks, vq, vs, bt, ln, interpret=True)
+    out_f = paged_attention_ref(q, kp, vp, bt, ln)
+    err = np.abs(np.asarray(out_i8) - np.asarray(out_f))
+    assert err.max() < 0.05 * np.abs(np.asarray(out_f)).max()

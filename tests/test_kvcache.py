@@ -1,0 +1,112 @@
+"""Paged KV pool invariants (unit + hypothesis property tests)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import RuleBasedStateMachine, invariant, precondition, rule
+
+from repro.serving.kvcache import PagedKVPool
+
+
+def test_alloc_free_roundtrip():
+    pool = PagedKVPool(n_blocks=32, page_size=16)
+    pool.allocate(1, 100)                     # 7 blocks
+    assert pool.n_used == 7
+    assert pool.n_tokens(1) == 100
+    pool.free(1)
+    assert pool.n_free == 32
+
+
+def test_append_token_block_boundary():
+    pool = PagedKVPool(n_blocks=8, page_size=4)
+    pool.allocate(1, 4)
+    assert pool.n_used == 1
+    pool.append_token(1)                       # overflows into a new block
+    assert pool.n_used == 2
+    assert pool.n_tokens(1) == 5
+
+
+def test_replica_promotion():
+    pool = PagedKVPool(n_blocks=16, page_size=16)
+    assert pool.host_replica(peer=7, rid=42, n_blocks=3)
+    assert pool.replica_blocks_used() == 3
+    refs = pool.promote_replica(7, 42)
+    assert len(refs) == 3
+    assert pool.table(42) == refs              # now primary
+    assert pool.replica_blocks_used() == 0
+
+
+def test_pressure_eviction_frees_replicas_first():
+    pool = PagedKVPool(n_blocks=8, page_size=16)
+    pool.host_replica(1, 10, 4)
+    pool.allocate(2, 50)                       # 4 blocks, pool now full
+    assert pool.n_free == 0
+    with pytest.raises(MemoryError):
+        pool.allocate(3, 40)
+    pool.evict_replicas_for_pressure(3)
+    pool.allocate(3, 40)                       # fits after eviction
+    assert pool.n_tokens(3) == 40
+
+
+def test_host_replica_rejects_without_headroom():
+    pool = PagedKVPool(n_blocks=4, page_size=16)
+    pool.allocate(1, 60)
+    assert not pool.host_replica(2, 9, 2)     # replicas never raise
+
+
+class PoolMachine(RuleBasedStateMachine):
+    """Property: the free list and tables always partition the pool."""
+
+    def __init__(self):
+        super().__init__()
+        self.pool = PagedKVPool(n_blocks=24, page_size=4)
+        self.live = set()
+        self.rid = 0
+
+    @rule(tokens=st.integers(1, 30))
+    def allocate(self, tokens):
+        self.rid += 1
+        try:
+            self.pool.allocate(self.rid, tokens)
+            self.live.add(self.rid)
+        except MemoryError:
+            pass
+
+    @rule()
+    def append(self):
+        for rid in sorted(self.live):
+            try:
+                self.pool.append_token(rid)
+            except MemoryError:
+                pass
+            break
+
+    @rule()
+    def free_one(self):
+        if self.live:
+            rid = sorted(self.live)[0]
+            self.pool.free(rid)
+            self.live.discard(rid)
+
+    @rule(n=st.integers(1, 4))
+    def replica(self, n):
+        self.pool.host_replica(99, self.rid + 1000, n)
+
+    @rule()
+    def evict(self):
+        self.pool.evict_replicas_for_pressure(self.pool.n_blocks)
+
+    @invariant()
+    def no_slot_leak_or_double_book(self):
+        pool = self.pool
+        used = []
+        for rid in pool.live_requests():
+            used.extend(ref.slot for ref in pool.table(rid))
+        for key in list(pool._replica_tables):
+            used.extend(ref.slot for ref in pool._replica_tables[key])
+        assert len(used) == len(set(used)), "slot double-booked"
+        assert set(used).isdisjoint(pool._free), "slot both used and free"
+        assert len(used) + pool.n_free == pool.n_blocks, "slot leaked"
+
+
+TestPoolMachine = PoolMachine.TestCase
+TestPoolMachine.settings = settings(max_examples=30, stateful_step_count=40,
+                                    deadline=None)

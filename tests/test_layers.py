@@ -1,0 +1,97 @@
+"""Layer-level properties: attention masking/window/chunking equivalences,
+RoPE, cache updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(b=2, sq=24, skv=24, h=4, kh=2, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, kh, d)), jnp.float32)
+    return q, k, v
+
+
+def _naive(q, k, v, causal, window=0, kv_len=None):
+    b, sq, h, d = q.shape
+    k = L._expand_kv(k, h)
+    v = L._expand_kv(v, h)
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q), np.asarray(k)) / np.sqrt(d)
+    skv = k.shape[1]
+    for i in range(sq):
+        for j in range(skv):
+            dead = (causal and j > i) or (window and j <= i - window)
+            if dead:
+                s[:, :, i, j] = -1e30
+    if kv_len is not None:
+        for bi in range(b):
+            kl = int(kv_len if np.isscalar(kv_len) else kv_len[bi])
+            s[bi, :, :, kl:] = -1e30
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 8), (False, 0)])
+def test_attention_matches_naive(causal, window):
+    q, k, v = _qkv()
+    out = L.attention(q, k, v, causal=causal, window=window, q_chunk=8)
+    ref = _naive(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_chunking_invariance():
+    """Output must not depend on the q_chunk tiling."""
+    q, k, v = _qkv(sq=40, skv=40)
+    outs = [np.asarray(L.attention(q, k, v, causal=True, q_chunk=c))
+            for c in (5, 8, 40, 1024)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kv_len=st.integers(1, 24), seed=st.integers(0, 100))
+def test_attention_kv_len_masks(kv_len, seed):
+    q, k, v = _qkv(sq=1, seed=seed)
+    out = L.attention(q, k, v, causal=False, kv_len=jnp.int32(kv_len))
+    ref = _naive(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_kv_cache_update_equals_dus():
+    rng = np.random.default_rng(0)
+    cache = jnp.asarray(rng.standard_normal((2, 16, 2, 8)), jnp.float32)
+    new = jnp.asarray(rng.standard_normal((2, 1, 2, 8)), jnp.float32)
+    for slot in (0, 7, 15):
+        a = L.kv_cache_update(cache, new, jnp.int32(slot))
+        b = jax.lax.dynamic_update_slice_in_dim(cache, new, slot, axis=1)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rope_relative_property():
+    """RoPE: <q_m, k_n> depends only on m - n."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = L.apply_rope(x, jnp.asarray([[m]], jnp.int32), 10_000.0)
+        kn = L.apply_rope(y, jnp.asarray([[n]], jnp.int32), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(102, 100), rel=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rms_norm_scale_invariant_direction():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8)), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    a = L.rms_norm(x, w)
+    b = L.rms_norm(3.0 * x, w)
+    # not exactly equal: eps shifts by 9x under input scaling
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)

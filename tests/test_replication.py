@@ -1,0 +1,83 @@
+"""Background KV replication semantics (paper Sec 3.2 mechanism #3)."""
+import pytest
+
+from repro.core.cluster import build_group
+from repro.core.replication import ReplicationConfig, ReplicationManager
+from repro.serving.request import Request
+
+
+def _setup(n_instances=2, blocks=64):
+    g = build_group(n_instances, 4, kv_blocks_per_node=blocks)
+    mgr = ReplicationManager(g, ReplicationConfig(blocks_per_second=1000))
+    return g, mgr
+
+
+def test_background_tick_replicates_blocks():
+    g, mgr = _setup()
+    req = Request(rid=1, prompt_len=64, max_new_tokens=10, arrival_time=0.0)
+    node = g.instances[0].home_nodes[0]
+    node.kv_pool.allocate(1, 64)
+    mgr.tick(1.0, {1: req})
+    target = g.instances[1].home_nodes[0]
+    assert target.kv_pool.replica_table(node.node_id, 1)
+    assert req.replicated_through == 64
+    assert all(b.replicated for b in node.kv_pool.table(1))
+
+
+def test_budget_limits_replication_rate():
+    g, mgr = _setup()
+    mgr.cfg = ReplicationConfig(blocks_per_second=2)      # 2 blocks/sec
+    node = g.instances[0].home_nodes[0]
+    node.kv_pool.allocate(1, 16 * 10)                     # 10 blocks
+    req = Request(rid=1, prompt_len=160, max_new_tokens=1, arrival_time=0)
+    mgr.tick(1.0, {1: req})
+    done = sum(b.replicated for b in node.kv_pool.table(1))
+    assert done == 2                                      # budget respected
+
+
+def test_new_tokens_dirty_blocks():
+    g, mgr = _setup()
+    node = g.instances[0].home_nodes[0]
+    node.kv_pool.allocate(1, 16)
+    req = Request(rid=1, prompt_len=16, max_new_tokens=8, arrival_time=0)
+    mgr.tick(1.0, {1: req})
+    assert req.replicated_through == 16
+    node.kv_pool.append_token(1)          # dirties the (partial) last block
+    assert not node.kv_pool.table(1)[-1].replicated
+    mgr.tick(1.0, {1: req})
+    assert req.replicated_through == 17
+
+
+def test_target_pressure_evicts_other_replicas():
+    g, mgr = _setup(blocks=8)
+    target = g.instances[1].home_nodes[0]
+    target.kv_pool.host_replica(99, 50, 6)                # mostly full
+    node = g.instances[0].home_nodes[0]
+    node.kv_pool.allocate(1, 16 * 4)
+    req = Request(rid=1, prompt_len=64, max_new_tokens=1, arrival_time=0)
+    mgr.tick(1.0, {1: req})
+    # stale peer-99 replicas were evicted to make room
+    assert target.kv_pool.replica_table(node.node_id, 1)
+    assert not target.kv_pool.replica_table(99, 50)
+
+
+def test_overhead_factor_in_paper_band():
+    g, mgr = _setup()
+    assert 1.0 < mgr.overhead_factor() <= 1.05            # Fig 9: <= ~4%
+    mgr.cfg = ReplicationConfig(enabled=False)
+    assert mgr.overhead_factor() == 1.0
+
+
+def test_promotion_on_failure_path():
+    g, mgr = _setup()
+    node = g.instances[0].home_nodes[2]
+    target = mgr.target_for(node)
+    node.kv_pool.allocate(7, 48)
+    req = Request(rid=7, prompt_len=48, max_new_tokens=1, arrival_time=0)
+    mgr.tick(1.0, {7: req})
+    node.fail()
+    resumed_on = mgr.target_for_failed(node)
+    assert resumed_on is target
+    refs = mgr.promote(node.node_id, resumed_on, 7)
+    assert len(refs) == 3
+    assert resumed_on.kv_pool.n_tokens(7) == 48
