@@ -1,0 +1,15 @@
+PYTHON ?= python
+
+.PHONY: check test bench-paged serve
+
+check: test
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+bench-paged:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_kernels
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead
+
+serve:
+	PYTHONPATH=src $(PYTHON) -m repro.serving.server --arch llama3-8b

@@ -62,8 +62,46 @@ def main(fast: bool = True):
     us5 = _time(jax.jit(lambda *z: ssd_chunked(*z, chunk=64)), xdt, a, Bm, Cm)
     rows.append(fmt_row("kernels", "ssd_chunked_xla_cpu", round(us5, 1),
                         f"chunked-vs-seq speedup {us3/us5:.1f}x"))
+
+    # end-to-end paged-engine decode throughput (reduced llama on CPU):
+    # continuous batching through PagedKVPool block tables + the paged
+    # attention kernel, sampling on device (one host sync per step)
+    rows.append(_paged_engine_decode_row())
     emit(rows, HEADER)
     return rows
+
+
+def _paged_engine_decode_row():
+    from benchmarks.bench_overhead import update_bench_json
+    from repro.configs import get_config
+    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.request import Request
+
+    rng = np.random.default_rng(0)
+    cfg = get_config("llama3-8b").reduced()
+    n_slots, n_new = 8, 48
+    eng = RealEngine(cfg, EngineConfig(max_slots=n_slots, max_seq=128,
+                                       replicate=False), n_instances=1)
+    for i in range(n_slots):
+        eng.submit(Request(
+            rid=i, prompt_len=16, max_new_tokens=n_new, arrival_time=0.0,
+            prompt_tokens=rng.integers(1, cfg.vocab_size, 16).tolist()))
+    eng.step()                                  # admit + warm the jit cache
+    eng.step()
+    t0 = time.perf_counter()
+    steps = 0
+    while any(i.requests for i in eng.instances):
+        eng.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    toks_per_s = steps * n_slots / dt
+    us_per_step = dt / max(steps, 1) * 1e6
+    update_bench_json("paged_decode_throughput", {
+        "batch": n_slots, "steps": steps, "us_per_step": round(us_per_step, 1),
+        "tokens_per_s": round(toks_per_s, 1),
+        "note": "reduced llama3-8b, CPU interpret-mode kernel"})
+    return fmt_row("kernels", "paged_engine_decode", round(us_per_step, 1),
+                   f"{toks_per_s:.1f}tok/s@B{n_slots}")
 
 
 if __name__ == "__main__":

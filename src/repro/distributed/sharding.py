@@ -28,6 +28,16 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def _norm_axes(axes):
+    """Collapse 1-tuples to the bare axis name so specs compare canonically
+    (P(..., "data", ...) rather than P(..., ("data",), ...))."""
+    if not axes:
+        return None
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
 def axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1
@@ -160,15 +170,15 @@ def cache_shardings(cache_shape, mesh: Mesh, arch_type: str):
         shape = leaf.shape
         name = keys[-1] if keys else ""
         if arch_type in ("dense", "moe", "vlm"):
-            bspec = dp if _div(shape[1], mesh, dp) else None
+            bspec = _norm_axes(dp) if _div(shape[1], mesh, dp) else None
             return NamedSharding(mesh, P(None, bspec, mdl(shape[2]), None, None))
         if arch_type == "ssm":
-            bspec = dp if _div(shape[1], mesh, dp) else None
+            bspec = _norm_axes(dp) if _div(shape[1], mesh, dp) else None
             if name == "conv":
                 return NamedSharding(mesh, P(None, bspec, None, mdl(shape[3])))
             return NamedSharding(mesh, P(None, bspec, None, None, mdl(shape[4])))
         if arch_type == "hybrid":
-            bspec = dp if _div(shape[0], mesh, dp) else None
+            bspec = _norm_axes(dp) if _div(shape[0], mesh, dp) else None
             if name == "h":
                 return NamedSharding(mesh, P(bspec, mdl(shape[1])))
             if name == "conv":

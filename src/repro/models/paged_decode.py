@@ -1,0 +1,152 @@
+"""Paged decode fast path: the serving engine's hot loop over a block-paged
+KV pool (serving/kvcache.py) attending via the Pallas flash-decode kernel
+(kernels/paged_attention.py; interpret-mode on CPU, Mosaic on TPU).
+
+Pool layout here is the kernel's native layout with a leading stacked-layer
+axis:  k_pages / v_pages : (L, K, n_blocks, page, D).  ``jax.lax.scan`` over
+L feeds each layer's (K, P, page, D) slice straight to the kernel — no
+per-step transpose of the pool.
+
+Two entry points:
+
+  * ``prefill_bucketed`` — run a prompt padded to a power-of-2 bucket so the
+    jit cache holds O(log max_seq) programs instead of one per prompt length
+    (the seed engine recompiled ``prefill`` for every new prompt length).
+    Causality makes the tail padding invisible to positions < true_len, so
+    the last real token's logits and the first true_len KV rows are exact.
+  * ``decode_step_paged`` — one continuous-batching decode step: write each
+    request's new KV into its current page (scatter by block table), attend
+    over the paged pool, sample on device. One host sync per step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.serving.sampling import sample
+
+
+def next_bucket(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= max(n, lo)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def kv_dtype(cfg):
+    """Paged-pool storage dtype (the int8 pool path keeps bf16 here; the
+    quantized kernel is wired separately in kernels/paged_attention_int8)."""
+    return jnp.bfloat16 if cfg.kv_dtype == "int8" else jnp.dtype(cfg.kv_dtype)
+
+
+def init_pages(cfg, n_blocks: int, page_size: int, dtype=None):
+    """Zeroed paged pool buffers in kernel layout (L, K, P, page, D)."""
+    dtype = dtype or kv_dtype(cfg)
+    shape = (cfg.n_layers, cfg.n_kv_heads, n_blocks, page_size, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# prefill (bucketed)
+# --------------------------------------------------------------------------
+
+def prefill_bucketed(cfg, params, tokens, true_len, *, q_chunk: int = 1024):
+    """Prompt forward over bucket-padded tokens.
+
+    tokens: (1, S_bucket) int32, positions [true_len, S_bucket) are padding;
+    true_len: () int32 (traced — one compile per bucket, not per length).
+    Returns (logits (1, V) at position true_len-1, k, v (L, S_bucket, K, D)).
+    Rows >= true_len of k/v are garbage and must be masked/overwritten by the
+    caller (the paged engine masks by length and overwrites them on decode).
+    """
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    q_chunk = min(q_chunk, s)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+        o = L.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        q_chunk=q_chunk)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, (k[0].astype(kv_dtype(cfg)), v[0].astype(kv_dtype(cfg)))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    xt = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)  # (1,1,d)
+    # f32 logits to match transformer.prefill (greedy tie determinism)
+    logits = L.unembed(params["embed"], cfg, xt.astype(jnp.float32))
+    return logits[:, 0], ks, vs
+
+
+def pack_pages(k_seq, v_seq, n_pages: int, page: int):
+    """(L, S, K, D) prefill KV -> (L, K, n_pages, page, D) pool blocks.
+    S must cover n_pages*page (bucket padding guarantees it)."""
+    l, s, kh, d = k_seq.shape
+    span = n_pages * page
+
+    def to_blocks(x):
+        x = x[:, :span].reshape(l, n_pages, page, kh, d)
+        return x.transpose(0, 3, 1, 2, 4)               # (L, K, n_pages, page, D)
+
+    return to_blocks(k_seq), to_blocks(v_seq)
+
+
+# --------------------------------------------------------------------------
+# decode (paged)
+# --------------------------------------------------------------------------
+
+def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
+                      pos, rng=None, *, temperature: float = 0.0,
+                      interpret: bool | None = None):
+    """One decode step for B slots over the paged pool.
+
+    token: (B,) int32 — last sampled token per slot (garbage for idle slots);
+    k_pages/v_pages: (L, K, P, page, D); block_tables: (B, pages_per_seq)
+    int32 physical block per logical page (idle slots point every entry at a
+    scratch block); pos: (B,) int32 — write position == current length.
+
+    Each layer scatters the new KV into (block_tables[b, pos//page], pos%page)
+    and attends via the Pallas paged kernel with lengths = pos + 1. Sampling
+    stays on device: returns (next_token (B,), logits (B, V), k_pages,
+    v_pages) with a single host sync left to the caller.
+    """
+    b = token.shape[0]
+    page = k_pages.shape[3]
+    rows = jnp.arange(b)
+    dst_block = block_tables[rows, pos // page]          # (B,) physical slots
+    dst_off = pos % page
+    lengths = pos + 1
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
+
+    def body(x, layer):
+        p, (kl, vl) = layer
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,{H,K},D)
+        kl = kl.at[:, dst_block, dst_off].set(
+            jnp.swapaxes(k[:, 0], 0, 1).astype(kl.dtype))    # (K,B,D) scatter
+        vl = vl.at[:, dst_block, dst_off].set(
+            jnp.swapaxes(v[:, 0], 0, 1).astype(vl.dtype))
+        o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths,
+                                interpret=interpret)
+        x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype))
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, (kl, vl)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["layers"], (k_pages, v_pages)))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg,
+                       x.astype(jnp.float32))[:, 0]      # (B, V)
+    nxt = sample(logits, rng=rng, temperature=temperature)
+    return nxt, logits, k_pages, v_pages

@@ -82,9 +82,14 @@ def forward(cfg, params, tokens=None, inputs_embeds=None, *,
 # KV cache (dense, model-level; the serving engine uses the paged pool)
 # --------------------------------------------------------------------------
 
+def kv_store_dtype(cfg):
+    """Dtype KV rows are stored in (int8 caches keep quantized payloads)."""
+    return jnp.int8 if cfg.kv_dtype == "int8" else jnp.dtype(cfg.kv_dtype)
+
+
 def init_cache(cfg, batch: int, capacity: int, dtype=None):
     """capacity = max seq len (full attention) or window size (SWA decode)."""
-    dtype = dtype or (jnp.int8 if cfg.kv_dtype == "int8" else jnp.bfloat16)
+    dtype = dtype or kv_store_dtype(cfg)
     shape = (cfg.n_layers, batch, capacity, cfg.n_kv_heads, cfg.head_dim)
     cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if cfg.kv_dtype == "int8":
@@ -139,13 +144,17 @@ def prefill(cfg, params, tokens=None, inputs_embeds=None, *,
             entry = {"k": _pad_seq(kq, pad), "v": _pad_seq(vq, pad),
                      "k_scale": _pad_seq(ks, pad), "v_scale": _pad_seq(vs, pad)}
         else:
-            entry = {"k": _pad_seq(k_keep.astype(jnp.bfloat16), pad),
-                     "v": _pad_seq(v_keep.astype(jnp.bfloat16), pad)}
+            kdt = kv_store_dtype(cfg)
+            entry = {"k": _pad_seq(k_keep.astype(kdt), pad),
+                     "v": _pad_seq(v_keep.astype(kdt), pad)}
         return x, entry
 
     x, cache = jax.lax.scan(body, x, params["layers"])
     x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
-    logits = L.unembed(params["embed"], cfg, x[:, -1:])
+    # f32 logits: bf16 quantization buckets vocab entries together, which
+    # makes greedy argmax tie-break on noise (serving determinism)
+    logits = L.unembed(params["embed"], cfg,
+                       x[:, -1:].astype(jnp.float32))
     return logits[:, 0], cache, s
 
 
@@ -181,7 +190,7 @@ def decode_step_ragged(cfg, params, token, cache, pos):
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
     x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
-    logits = L.unembed(params["embed"], cfg, x)
+    logits = L.unembed(params["embed"], cfg, x.astype(jnp.float32))
     return logits[:, 0], new_cache
 
 
@@ -229,5 +238,5 @@ def decode_step(cfg, params, token, cache, pos, *, window: int = 0):
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
     x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
-    logits = L.unembed(params["embed"], cfg, x)
+    logits = L.unembed(params["embed"], cfg, x.astype(jnp.float32))
     return logits[:, 0], new_cache

@@ -9,12 +9,18 @@ mechanisms appear here for real:
     and hands node-resident references to instances; replacing a failed
     instance's executor re-uses the already-materialized weights + the
     jit cache (no re-init, no reload);
-  * KV replication — after every decode step the per-request KV rows are
-    replicated (block-granularity bookkeeping via PagedKVPool metadata and
-    a real buffer snapshot) to the sibling instance;
-  * failover — ``fail()`` an instance and in-flight requests resume on the
-    replica from the replicated state, byte-identical continuation (tested
-    in tests/test_engine.py).
+  * paged KV — every instance's cache IS a ``PagedKVPool`` (kernel-layout
+    real buffers); decode attends through block tables with the Pallas
+    paged-attention kernel (interpret on CPU, Mosaic on TPU), prefill is
+    bucketed to power-of-2 lengths so the jit cache stays O(log max_seq);
+  * KV replication — block-granular deltas: only blocks dirtied by
+    ``append_token`` since the last pass are copied to the ring target
+    (invariant: a block is re-replicated iff ``BlockRef.replicated`` is
+    False). Per decode step that is at most ONE block per active request,
+    not the request's whole cache;
+  * failover — ``fail_instance`` promotes the hosted replica blocks in
+    place (``promote_replica``) and the request continues byte-identically
+    on the target (tested in tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -26,9 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.models import transformer as T
+from repro.models import paged_decode as PD
+from repro.serving.kvcache import PagedKVPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
+
+SCRATCH_RID = -7  # pool rid reserved for the idle-slot scratch block
 
 
 @dataclasses.dataclass
@@ -37,10 +46,13 @@ class EngineConfig:
     max_seq: int = 256
     temperature: float = 0.0
     replicate: bool = True
+    replication: str = "delta"   # "delta" (dirty blocks) | "full" (all blocks)
+    pool_blocks: int = 0         # 0 -> primaries + replicas + scratch
+    interpret: Optional[bool] = None  # None -> auto (interpret off-TPU)
 
 
 class RealInstance:
-    """One serving instance: dense-family model + slotted KV cache."""
+    """One serving instance: dense-family model over a paged KV pool."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0):
         self.cfg = cfg
@@ -49,44 +61,82 @@ class RealInstance:
         self.instance_id = instance_id
         self.alive = True
         B, S = ecfg.max_slots, ecfg.max_seq
-        self.cache = T.init_cache(cfg, B, S)
+        page = cfg.page_size
+        self.pages_per_seq = -(-S // page)
+        n_blocks = ecfg.pool_blocks or (2 * B * self.pages_per_seq + 1)
+        self.pool = PagedKVPool(
+            n_blocks, page, n_layers=cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, real=True,
+            dtype=PD.kv_dtype(cfg))
+        # idle batch slots write/attend into one scratch block, never freed
+        self.scratch = self.pool.allocate(SCRATCH_RID, 1)[0].slot
+        self.block_table = np.full((B, self.pages_per_seq), self.scratch,
+                                   np.int32)
         self.slot_rid = [-1] * B      # request id per slot
         self.slot_pos = np.zeros(B, np.int32)
         self.requests: Dict[int, Request] = {}
-        self._decode = jax.jit(
-            lambda p, tok, cache, pos: T.decode_step_ragged(cfg, p, tok, cache, pos))
+
+        temp = ecfg.temperature
+        interp = ecfg.interpret
+        # per-instance sampling stream (used only when temperature > 0)
+        self._rng = jax.random.PRNGKey(instance_id + 1)
+
+        def _step(p, tok, k_pages, v_pages, bt, pos, rng):
+            return PD.decode_step_paged(cfg, p, tok, k_pages, v_pages, bt,
+                                        pos, rng, temperature=temp,
+                                        interpret=interp)
+
+        # pool buffers are donated: decode updates pages in place
+        self._decode = jax.jit(_step, donate_argnums=(2, 3))
         self._prefill = jax.jit(
-            lambda p, toks: T.prefill(cfg, p, toks),
-            static_argnames=())
+            lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
 
     # -- admission -----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_rid) if r < 0]
+
+    def _allocate(self, rid: int, n_tokens: int):
+        """Allocate primary blocks, evicting hosted replicas under pressure
+        (the paper's rule: replicas are the first thing dropped)."""
+        need = self.pool.blocks_for_tokens(n_tokens)
+        if need > self.pool.n_free:
+            self.pool.evict_replicas_for_pressure(need)
+        return self.pool.allocate(rid, n_tokens)
 
     def admit(self, req: Request, now: float = 0.0) -> bool:
         slots = self.free_slots()
         if not slots or not self.alive:
             return False
         slot = slots[0]
-        toks = jnp.asarray([req.prompt_tokens], jnp.int32)
-        logits, cache, pos = self._prefill(self.params, toks)
-        # copy the single-request prefill cache into this slot's rows
-        k, v = cache["k"], cache["v"]                      # (L,1,S',K,D)
-        s = k.shape[2]
-        self.cache["k"] = jax.lax.dynamic_update_slice(
-            self.cache["k"], k.astype(self.cache["k"].dtype),
-            (0, slot, 0, 0, 0))
-        self.cache["v"] = jax.lax.dynamic_update_slice(
-            self.cache["v"], v.astype(self.cache["v"].dtype),
-            (0, slot, 0, 0, 0))
-        first = sample(logits, temperature=self.ecfg.temperature)
+        n = req.prompt_len
+        try:                           # reserve blocks BEFORE prefill so a
+            refs = self._allocate(req.rid, n)   # full pool costs no compute
+        except MemoryError:
+            return False
+        bucket = PD.next_bucket(n, lo=self.pool.page_size)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt_tokens
+        logits, k_seq, v_seq = self._prefill(
+            self.params, jnp.asarray(toks), jnp.int32(n))
+        self.pool.write_blocks([r.slot for r in refs],
+                               *PD.pack_pages(k_seq, v_seq, len(refs),
+                                              self.pool.page_size))
+        row = np.full(self.pages_per_seq, self.scratch, np.int32)
+        row[:len(refs)] = [r.slot for r in refs]
+        self.block_table[slot] = row
+        if self.ecfg.temperature > 0:
+            self._rng, admit_rng = jax.random.split(self._rng)
+        else:
+            admit_rng = None
+        first = sample(logits, rng=admit_rng,
+                       temperature=self.ecfg.temperature)
         req.output_tokens = [int(first[0])]
         req.generated = 1
         req.state = RequestState.DECODE
         if req.first_token_time < 0:
             req.first_token_time = now
         self.slot_rid[slot] = req.rid
-        self.slot_pos[slot] = pos
+        self.slot_pos[slot] = n
         self.requests[req.rid] = req
         return True
 
@@ -99,11 +149,25 @@ class RealInstance:
             return []
         toks = np.zeros(self.ecfg.max_slots, np.int32)
         for i in active:
-            toks[i] = self.requests[self.slot_rid[i]].output_tokens[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.slot_pos))
-        nxt = np.asarray(sample(logits, temperature=self.ecfg.temperature))
+            rid = self.slot_rid[i]
+            toks[i] = self.requests[rid].output_tokens[-1]
+            # account the KV row this step writes; may open a fresh block
+            # (marks the receiving block dirty -> delta replication unit)
+            try:
+                ref = self.pool.append_token(rid)
+            except MemoryError:
+                self.pool.evict_replicas_for_pressure(1)
+                ref = self.pool.append_token(rid)
+            self.block_table[i, ref.logical_idx] = ref.slot
+        if self.ecfg.temperature > 0:
+            self._rng, step_rng = jax.random.split(self._rng)
+        else:
+            step_rng = self._rng               # unused by greedy sample()
+        nxt, _, self.pool.k, self.pool.v = self._decode(
+            self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
+            jnp.asarray(self.block_table), jnp.asarray(self.slot_pos),
+            step_rng)
+        nxt = np.asarray(nxt)          # the step's single host sync
         finished = []
         for i in active:
             req = self.requests[self.slot_rid[i]]
@@ -115,31 +179,44 @@ class RealInstance:
                 req.state = RequestState.DONE
                 req.finish_time = now
                 finished.append(req)
-                self.slot_rid[i] = -1
-                self.requests.pop(req.rid)
+                self.release(req.rid)
         return finished
 
-    # -- replication / failover ------------------------------------------------
-    def snapshot_request(self, rid: int):
-        """Export a request's KV rows + position (the replication payload)."""
-        slot = self.slot_rid.index(rid)
-        return {
-            "k": self.cache["k"][:, slot],
-            "v": self.cache["v"][:, slot],
-            "pos": int(self.slot_pos[slot]),
-            "tokens": list(self.requests[rid].output_tokens),
-        }
+    def release(self, rid: int):
+        """Free a request's engine slot + primary blocks."""
+        if rid in self.requests:
+            slot = self.slot_rid.index(rid)
+            self.slot_rid[slot] = -1
+            self.slot_pos[slot] = 0
+            self.block_table[slot] = self.scratch
+            self.pool.free(rid)
+            self.requests.pop(rid)
 
-    def restore_request(self, req: Request, snap) -> bool:
-        """Failover entry: continue a request from replicated state."""
+    def slot_of(self, rid: int) -> int:
+        return self.slot_rid.index(rid)
+
+    # -- failover --------------------------------------------------------------
+    def adopt_replica(self, peer: int, req: Request, meta) -> bool:
+        """Failover entry: promote hosted replica blocks to primary and
+        resume the request here — no buffer copy, just ownership flip."""
         slots = self.free_slots()
         if not slots or not self.alive:
             return False
+        page = self.pool.page_size
+        total = meta["pos"]
+        refs = self.pool.promote_replica(peer, req.rid)
+        if len(refs) < self.pool.blocks_for_tokens(total):
+            self.pool.free(req.rid)    # incomplete replica: can't resume
+            return False
+        for i, ref in enumerate(refs):
+            ref.n_filled = max(0, min(page, total - i * page))
+            ref.replicated = False     # re-replicate to OUR ring target
         slot = slots[0]
-        self.cache["k"] = self.cache["k"].at[:, slot].set(snap["k"])
-        self.cache["v"] = self.cache["v"].at[:, slot].set(snap["v"])
-        self.slot_pos[slot] = snap["pos"]
-        req.output_tokens = list(snap["tokens"])
+        row = np.full(self.pages_per_seq, self.scratch, np.int32)
+        row[:len(refs)] = [r.slot for r in refs]
+        self.block_table[slot] = row
+        self.slot_pos[slot] = total
+        req.output_tokens = list(meta["tokens"])
         req.state = RequestState.DECODE
         req.n_migrations += 1
         self.slot_rid[slot] = req.rid
@@ -151,7 +228,7 @@ class RealInstance:
 
 
 class RealEngine:
-    """LB group of RealInstances with ring replication + failover."""
+    """LB group of RealInstances with ring block-delta replication + failover."""
 
     def __init__(self, cfg, ecfg: Optional[EngineConfig] = None,
                  n_instances: int = 2, seed: int = 0):
@@ -162,12 +239,17 @@ class RealEngine:
         self.params = api.init_params(cfg, jax.random.PRNGKey(seed))
         self.instances = [RealInstance(cfg, self.params, self.ecfg, i)
                           for i in range(n_instances)]
-        self.replicas: Dict[int, dict] = {}     # rid -> latest snapshot
-        self.replica_home: Dict[int, int] = {}  # rid -> target instance
+        # rid -> {"peer", "home", "pos", "tokens"} (tiny host-side metadata;
+        # the KV payload lives in the target pool's hosted replica blocks)
+        self.replica_meta: Dict[int, dict] = {}
         self.waiting: List[Request] = []
         self.done: List[Request] = []
-        self._rr = 0
         self.t = 0.0
+        # replication traffic accounting (bench_overhead reads these)
+        self.repl_blocks_total = 0
+        self.repl_bytes_total = 0
+        self.repl_steps = 0
+        self.active_request_steps = 0
 
     def submit(self, req: Request):
         self.waiting.append(req)
@@ -182,54 +264,126 @@ class RealEngine:
         return idx
 
     def step(self):
-        """One engine iteration: admit, decode everywhere, replicate."""
+        """One engine iteration: admit, decode everywhere, replicate deltas."""
         self.t += 1.0
         alive = [i for i in self.instances if i.alive]
-        # least-loaded admission across alive instances
+        # least-loaded admission: try every alive instance (an instance can
+        # have free slots but a full pool — others may still admit)
         while self.waiting and alive:
-            target = max(alive, key=lambda i: len(i.free_slots()))
-            if not target.free_slots():
+            admitted = False
+            for target in sorted(alive, key=lambda i: len(i.free_slots()),
+                                 reverse=True):
+                if target.free_slots() and \
+                        target.admit(self.waiting[0], self.t):
+                    self.waiting.pop(0)
+                    admitted = True
+                    break
+            if not admitted:
                 break
-            target.admit(self.waiting.pop(0), self.t)
         for inst in alive:
-            self.done.extend(inst.step(self.t))
+            self.active_request_steps += len(inst.requests)
+            for req in inst.step(self.t):
+                self._drop_replica_of(req.rid)
+                self.done.append(req)
         if self.ecfg.replicate:
             self._replicate()
+            self.repl_steps += 1
+
+    def _drop_replica_of(self, rid: int):
+        meta = self.replica_meta.pop(rid, None)
+        if meta is not None:
+            home = self.instances[meta["home"]]
+            home.pool.drop_replica(meta["peer"], rid)
 
     def _replicate(self):
-        """Background KV replication: snapshot every live request to its
-        ring target (block bookkeeping + full-fidelity buffer copy)."""
+        """Background KV replication at block granularity. Delta mode copies
+        only blocks with ``replicated == False`` (cleared by ``append_token``
+        / prefill allocation); full mode re-copies every live block — the
+        seed's whole-snapshot behaviour, kept for the overhead benchmark."""
+        full = self.ecfg.replication == "full"
         for inst in self.instances:
             if not inst.alive:
                 continue
-            tgt = self._ring_target(inst.instance_id)
-            if tgt < 0:
+            tgt_id = self._ring_target(inst.instance_id)
+            if tgt_id < 0:
                 continue
-            for rid in list(inst.requests):
-                self.replicas[rid] = inst.snapshot_request(rid)
-                self.replica_home[rid] = tgt
-                inst.requests[rid].replicated_through = \
-                    inst.requests[rid].total_len
+            tgt = self.instances[tgt_id]
+            src_slots: List[int] = []
+            dst_slots: List[int] = []
+            for rid, req in inst.requests.items():
+                table = inst.pool.table(rid)
+                rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                need = len(table) - len(rtab)
+                if need > 0:
+                    if not tgt.pool.host_replica(inst.instance_id, rid, need):
+                        continue       # no headroom on target; retry next pass
+                    rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                for ref, rref in zip(table, rtab):
+                    # copy when the primary block is dirty OR the hosted
+                    # block has never received content (rref.replicated
+                    # False on fresh hosting — incl. re-hosting after a
+                    # pressure eviction dropped the old replica table)
+                    if full or not ref.replicated or not rref.replicated:
+                        src_slots.append(ref.slot)
+                        dst_slots.append(rref.slot)
+                        ref.replicated = True
+                        rref.replicated = True
+                self.replica_meta[rid] = {
+                    "peer": inst.instance_id, "home": tgt_id,
+                    "pos": int(inst.slot_pos[inst.slot_of(rid)]),
+                    "tokens": list(req.output_tokens),
+                }
+                req.replicated_through = req.total_len
+            inst.pool.copy_blocks_to(tgt.pool, src_slots, dst_slots)
+            self.repl_blocks_total += len(src_slots)
+            self.repl_bytes_total += len(src_slots) * inst.pool.block_nbytes
+
+    def replication_stats(self) -> dict:
+        steps = max(self.repl_steps, 1)
+        return {
+            "mode": self.ecfg.replication if self.ecfg.replicate else "off",
+            "blocks_total": self.repl_blocks_total,
+            "bytes_total": self.repl_bytes_total,
+            "blocks_per_step": self.repl_blocks_total / steps,
+            "bytes_per_step": self.repl_bytes_total / steps,
+            "blocks_per_request_step":
+                self.repl_blocks_total / max(self.active_request_steps, 1),
+        }
 
     def fail_instance(self, instance_id: int) -> List[int]:
-        """Kill an instance; failover its requests from replicas.
-        Returns the rids that resumed seamlessly."""
+        """Kill an instance; failover its requests by promoting the replica
+        blocks already hosted on the ring target. Returns the rids that
+        resumed seamlessly."""
         inst = self.instances[instance_id]
         victims = list(inst.requests.values())
         inst.fail()
         resumed = []
         for req in victims:
-            snap = self.replicas.get(req.rid)
-            home = self.replica_home.get(req.rid, -1)
+            meta = self.replica_meta.pop(req.rid, None)
             target = None
-            if snap is not None and home >= 0 and self.instances[home].alive:
-                target = self.instances[home]
-            if target is not None and target.restore_request(req, snap):
+            if meta is not None and self.instances[meta["home"]].alive:
+                target = self.instances[meta["home"]]
+            if target is not None and \
+                    target.adopt_replica(meta["peer"], req, meta):
                 resumed.append(req.rid)
             else:
+                if meta is not None and self.instances[meta["home"]].alive:
+                    self.instances[meta["home"]].pool.drop_replica(
+                        meta["peer"], req.rid)
                 req.restart()
                 req.state = RequestState.QUEUED
                 self.waiting.insert(0, req)
+        # replicas the dead instance hosted for others are gone: mark those
+        # primaries dirty so the next pass re-replicates to a new target
+        for other in self.instances:
+            if not other.alive:
+                continue
+            for rid in other.requests:
+                meta = self.replica_meta.get(rid)
+                if meta is not None and meta["home"] == instance_id:
+                    self.replica_meta.pop(rid)
+                    for ref in other.pool.table(rid):
+                        ref.replicated = False
         return resumed
 
     def run(self, max_iters: int = 1000):

@@ -17,8 +17,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 try:  # real-buffer mode is optional (sim benchmarks never touch jax)
+    import jax
     import jax.numpy as jnp
 except Exception:  # pragma: no cover
+    jax = None
     jnp = None
 
 
@@ -35,10 +37,13 @@ class BlockRef:
 class PagedKVPool:
     """Fixed-size pool of KV blocks with a free list.
 
-    Layout (real mode): k/v arrays of shape
-      (n_layers, n_blocks, page_size, n_kv_heads, head_dim)
-    so one 'block' spans all layers of this node's stage — the natural
-    replication unit (one network message per block per peer).
+    Layout (real mode): k/v arrays in the paged-attention kernel's native
+    layout with a stacked-layer axis,
+      (n_layers, n_kv_heads, n_blocks, page_size, head_dim)
+    so one 'block' (an n_blocks-axis slot) spans all layers of this node's
+    stage — the natural replication unit (one network message per block per
+    peer) — and each layer's (K, P, page, D) slice feeds the kernel
+    directly, no transpose on the decode hot path.
     """
 
     def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
@@ -53,9 +58,17 @@ class PagedKVPool:
         self._replica_tables: Dict[Tuple[int, int], List[BlockRef]] = {}
         if real:
             assert jnp is not None
-            shape = (n_layers, n_blocks, page_size, n_kv_heads, head_dim)
+            shape = (n_layers, n_kv_heads, n_blocks, page_size, head_dim)
             self.k = jnp.zeros(shape, dtype)
             self.v = jnp.zeros(shape, dtype)
+
+    @property
+    def block_nbytes(self) -> int:
+        """Bytes of one replication message (k+v, all layers of the stage)."""
+        if not self.real:
+            return 0
+        per_slot = self.k.size // self.n_blocks
+        return 2 * per_slot * self.k.dtype.itemsize
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -126,14 +139,16 @@ class PagedKVPool:
     # -- replica hosting -------------------------------------------------------
     def host_replica(self, peer: int, rid: int, n_blocks: int) -> bool:
         """Reserve blocks for a peer's replicated request. Never raises:
-        returns False if there is no headroom (peer will retry / drop)."""
+        returns False if there is no headroom (peer will retry / drop).
+        Grows an existing replica table incrementally (delta replication
+        hosts one block at a time as the primary request grows)."""
         if n_blocks > self.n_free:
             return False
-        refs = []
-        for _ in range(n_blocks):
+        table = self._replica_tables.setdefault((peer, rid), [])
+        base = len(table)
+        for i in range(n_blocks):
             slot = self._free.pop()
-            refs.append(BlockRef(rid, len(refs), slot, n_filled=self.page_size))
-        self._replica_tables.setdefault((peer, rid), []).extend(refs)
+            table.append(BlockRef(rid, base + i, slot, n_filled=self.page_size))
         return True
 
     def replica_table(self, peer: int, rid: int) -> List[BlockRef]:
@@ -170,19 +185,45 @@ class PagedKVPool:
         self._tables[rid] = refs
         return refs
 
-    # -- real-buffer block IO (used by the real-compute runner + tests) -----
+    # -- real-buffer block IO (used by the real-compute engine + tests) -----
     def write_block(self, slot: int, k_block, v_block):
+        """k_block/v_block: (L, K, page, D)."""
         assert self.real
-        self.k = self.k.at[:, slot].set(k_block)
-        self.v = self.v.at[:, slot].set(v_block)
+        self.k = self.k.at[:, :, slot].set(k_block)
+        self.v = self.v.at[:, :, slot].set(v_block)
+
+    def write_blocks(self, slots: List[int], k_blocks, v_blocks):
+        """Bulk write (admission path): k/v_blocks (L, K, n, page, D) into
+        ``slots`` — one fused scatter instead of n full-pool updates."""
+        assert self.real
+        idx = jnp.asarray(slots, jnp.int32)
+        self.k, self.v = _scatter_blocks(self.k, self.v, idx,
+                                         k_blocks.astype(self.k.dtype),
+                                         v_blocks.astype(self.v.dtype))
 
     def read_block(self, slot: int):
         assert self.real
-        return self.k[:, slot], self.v[:, slot]
+        return self.k[:, :, slot], self.v[:, :, slot]
 
     def copy_block_to(self, other: "PagedKVPool", src_slot: int, dst_slot: int):
         """One block-replication message (paper's yellow arrow)."""
-        if self.real and other.real:
-            kb, vb = self.read_block(src_slot)
-            other.k = other.k.at[:, dst_slot].set(kb)
-            other.v = other.v.at[:, dst_slot].set(vb)
+        self.copy_blocks_to(other, [src_slot], [dst_slot])
+
+    def copy_blocks_to(self, other: "PagedKVPool",
+                       src_slots: List[int], dst_slots: List[int]):
+        """Batched block replication: this step's dirty blocks in one fused
+        gather/scatter (the per-step delta traffic)."""
+        if not (self.real and other.real) or not src_slots:
+            return
+        src = jnp.asarray(src_slots, jnp.int32)
+        dst = jnp.asarray(dst_slots, jnp.int32)
+        kb = self.k[:, :, src]
+        vb = self.v[:, :, src]
+        other.k, other.v = _scatter_blocks(other.k, other.v, dst, kb, vb)
+
+
+if jax is not None:
+    @jax.jit
+    def _scatter_blocks(k_pool, v_pool, slots, k_blocks, v_blocks):
+        return (k_pool.at[:, :, slots].set(k_blocks),
+                v_pool.at[:, :, slots].set(v_blocks))

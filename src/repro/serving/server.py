@@ -69,10 +69,13 @@ class EngineService:
             return {
                 "instances": [
                     {"id": i.instance_id, "alive": i.alive,
-                     "active": len(i.requests)}
+                     "active": len(i.requests),
+                     "pool_used_blocks": i.pool.n_used,
+                     "pool_replica_blocks": i.pool.replica_blocks_used()}
                     for i in self.engine.instances],
                 "queued": len(self.engine.waiting),
                 "completed": len(self.engine.done),
+                "replication": self.engine.replication_stats(),
             }
 
     def shutdown(self):

@@ -1,5 +1,7 @@
 """Paged KV pool invariants (unit + hypothesis property tests)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.stateful import RuleBasedStateMachine, invariant, precondition, rule
 

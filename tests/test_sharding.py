@@ -14,7 +14,12 @@ DEVS = np.array(jax.devices() * 1)
 
 
 def _abstract_mesh(shape, names):
-    return jax.sharding.AbstractMesh(shape, names)
+    try:
+        # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, names)
+    except TypeError:
+        # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
 
 MESH = _abstract_mesh((16, 16), ("data", "model"))
