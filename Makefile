@@ -1,11 +1,14 @@
 PYTHON ?= python
 
-.PHONY: check test bench-paged serve
+.PHONY: check test bench-paged serve docs-check
 
-check: test
+check: test docs-check
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+docs-check:
+	$(PYTHON) tools/check_docs.py
 
 bench-paged:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_kernels

@@ -14,8 +14,12 @@ import os
 from benchmarks.common import emit, fmt_row, run_scenario
 
 HEADER = "bench,cluster,rps,lat_base,lat_repl,overhead_avg_pct,overhead_p99_pct"
-TRAFFIC_HEADER = ("bench,mode,blocks_per_step,bytes_per_step,"
-                  "blocks_per_request_step,bytes_total")
+TRAFFIC_HEADER = ("bench,arch,mode,blocks_per_step,bytes_per_step,"
+                  "blocks_per_request_step,blobs_per_request_step,bytes_total")
+
+# one arch per paged family: dense, MoE (routed MLP, same KV), hybrid
+# (paged local attention + RG-LRU state blobs)
+TRAFFIC_ARCHS = ("llama3-8b", "mixtral-8x7b", "recurrentgemma-9b")
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_paged.json")
 
 
@@ -31,16 +35,19 @@ def update_bench_json(section: str, payload):
         f.write("\n")
 
 
-def replication_traffic(mode: str, n_requests: int = 6, prompt: int = 24,
+def replication_traffic(mode: str, arch: str = "llama3-8b",
+                        n_requests: int = 6, prompt: int = 24,
                         out: int = 24):
     """Run the real paged engine and read its replication counters."""
     import numpy as np
     from repro.configs import get_config
-    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.engine import (EngineConfig, RealEngine,
+                                      clamped_max_seq)
     from repro.serving.request import Request
 
-    cfg = get_config("llama3-8b").reduced()
-    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=96,
+    cfg = get_config(arch).reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4,
+                                       max_seq=clamped_max_seq(cfg, 96),
                                        replication=mode),
                      n_instances=2, seed=0)
     rng = np.random.default_rng(0)
@@ -51,6 +58,7 @@ def replication_traffic(mode: str, n_requests: int = 6, prompt: int = 24,
     eng.run(400)
     stats = eng.replication_stats()
     stats["block_bytes"] = eng.instances[0].pool.block_nbytes
+    stats["blob_bytes"] = eng.instances[0].pool.blob_nbytes
     stats["live_cache_blocks_per_request"] = \
         eng.instances[0].pool.blocks_for_tokens(prompt + out)
     return stats
@@ -74,21 +82,26 @@ def main(fast: bool = True):
                                 round(ov, 2), round(ovp, 2)))
     emit(rows, HEADER)
 
-    # real paged-engine replication traffic: full snapshot vs dirty deltas
-    traffic = {}
+    # real paged-engine replication traffic: full snapshot vs dirty deltas,
+    # one arch per paged family
     trows = []
-    for mode in ("full", "delta"):
-        s = replication_traffic(mode)
-        traffic[mode] = s
-        trows.append(fmt_row("repl_traffic", mode,
-                             round(s["blocks_per_step"], 2),
-                             round(s["bytes_per_step"], 1),
-                             round(s["blocks_per_request_step"], 3),
-                             s["bytes_total"]))
-    traffic["reduction_x"] = round(
-        traffic["full"]["bytes_total"] /
-        max(traffic["delta"]["bytes_total"], 1), 2)
-    update_bench_json("replication_traffic", traffic)
+    for arch in TRAFFIC_ARCHS:
+        traffic = {}
+        for mode in ("full", "delta"):
+            s = replication_traffic(mode, arch=arch)
+            traffic[mode] = s
+            trows.append(fmt_row("repl_traffic", arch, mode,
+                                 round(s["blocks_per_step"], 2),
+                                 round(s["bytes_per_step"], 1),
+                                 round(s["blocks_per_request_step"], 3),
+                                 round(s["blobs_per_request_step"], 3),
+                                 s["bytes_total"]))
+        traffic["reduction_x"] = round(
+            traffic["full"]["bytes_total"] /
+            max(traffic["delta"]["bytes_total"], 1), 2)
+        section = "replication_traffic" if arch == "llama3-8b" \
+            else f"replication_traffic_{arch.replace('-', '_')}"
+        update_bench_json(section, traffic)
     emit(trows, TRAFFIC_HEADER)
     return rows + trows
 

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 
-LRU_C = 8.0   # temperature constant from the Griffin paper
+LRU_C = 8.0     # temperature constant from the Griffin paper
+CONV_WIDTH = 4  # causal depthwise conv taps; decode carries CONV_WIDTH - 1
 
 
 # --------------------------------------------------------------------------
@@ -28,7 +29,7 @@ def init_rglru_layer(rng, cfg, dtype=jnp.bfloat16):
     return {
         "w_x": L.dense_init(r[0], (d, w), dtype=dtype),       # recurrence branch
         "w_gate_in": L.dense_init(r[1], (d, w), dtype=dtype),  # gelu gate branch
-        "conv_w": L.dense_init(r[2], (4, w), scale=0.5, dtype=dtype),
+        "conv_w": L.dense_init(r[2], (CONV_WIDTH, w), scale=0.5, dtype=dtype),
         "conv_b": jnp.zeros((w,), dtype),
         "wa": L.dense_init(r[3], (w, w), scale=0.02, dtype=dtype),
         "wx_gate": L.dense_init(r[4], (w, w), scale=0.02, dtype=dtype),
@@ -103,25 +104,104 @@ def rglru_step(p, x, h):
 # blocks
 # --------------------------------------------------------------------------
 
-def _recurrent_block(cfg, p, x, state=None):
-    """state: None | {"h": (B,w), "conv": (B,3,w)}. x: (B,S,d)."""
+def _recurrent_core(cfg, p, x, state=None):
+    """Shared RG-LRU block body (norm -> branch/gate -> conv -> recurrence
+    -> gated output -> MLP). state: None | {"h": (B,w), "conv": (B,3,w)};
+    x: (B,S,d). Besides the block output and end-of-sequence state, returns
+    the pre-conv branch and the full recurrence output so callers (the
+    bucketed prefill) can extract state at an interior position without
+    duplicating this body."""
     res = x
     xn = L.rms_norm(x, p["norm_t"], cfg.norm_eps)
     branch = xn @ p["w_x"]
     gate = jax.nn.gelu(xn @ p["w_gate_in"])
     conv_state = state["conv"].astype(branch.dtype) if state else None
-    branch, new_conv = _conv1d(branch, p["conv_w"], p["conv_b"], conv_state)
+    conv_out, new_conv = _conv1d(branch, p["conv_w"], p["conv_b"], conv_state)
     h0 = state["h"] if state else None
     if x.shape[1] == 1 and state is not None:
-        new_h, out = rglru_step(p, branch[:, 0], state["h"])
+        new_h, out = rglru_step(p, conv_out[:, 0], state["h"])
         out = out[:, None]
     else:
-        out, new_h = rglru_scan(p, branch, h0)
+        out, new_h = rglru_scan(p, conv_out, h0)
     y = (out.astype(gate.dtype) * gate) @ p["w_out"]
     x = res + y
     h2 = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
     x = x + L.mlp(p["mlp"], h2)
-    return x, {"h": new_h, "conv": new_conv.astype(jnp.bfloat16)}
+    return x, {"h": new_h, "conv": new_conv.astype(jnp.bfloat16)}, branch, out
+
+
+def _recurrent_block(cfg, p, x, state=None):
+    """state: None | {"h": (B,w), "conv": (B,3,w)}. x: (B,S,d)."""
+    x, new_state, _, _ = _recurrent_core(cfg, p, x, state)
+    return x, new_state
+
+
+def recurrent_prefill(cfg, p, x, true_len):
+    """``_recurrent_block`` over a bucket-padded prompt, returning the decode
+    state at position ``true_len`` instead of at the padded sequence end.
+
+    x: (B, S_bucket, d); true_len: () int32 (traced). The recurrence is
+    causal, so outputs at positions < true_len are unaffected by the tail
+    padding; the states a decode step needs are
+      h    — the RG-LRU hidden after consuming token true_len - 1,
+      conv — the last (conv_width - 1) *pre-conv* branch rows before
+             true_len (zero-padded on the left for short prompts, matching
+             the fresh-state convention of ``_conv1d``).
+    Returns (x_out (B,S,d), h (B,w) f32, conv (B, conv_width-1, w) bf16).
+    """
+    x, _, branch, out = _recurrent_core(cfg, p, x)
+    h = jax.lax.dynamic_slice_in_dim(out, true_len - 1, 1, axis=1)[:, 0]
+    k = p["conv_w"].shape[0]
+    zeros = jnp.zeros((branch.shape[0], k - 1, branch.shape[-1]),
+                      branch.dtype)
+    xp = jnp.concatenate([zeros, branch], axis=1)
+    # x row j sits at xp row j + k - 1, so rows [true_len, true_len + k - 2]
+    # of xp are exactly the conv state a decode at position true_len sees
+    conv = jax.lax.dynamic_slice_in_dim(xp, true_len, k - 1, axis=1)
+    return x, h, conv.astype(jnp.bfloat16)
+
+
+# --------------------------------------------------------------------------
+# state blob codec (paged serving: RG-LRU state as an opaque replication unit)
+# --------------------------------------------------------------------------
+
+def recurrent_layer_indices(cfg):
+    return tuple(i for i, k in enumerate(cfg.layer_kinds()) if k == "rglru")
+
+
+def state_blob_words(cfg) -> int:
+    """f32 words of one request's packed recurrent state: per rglru layer,
+    h (w,) + conv (CONV_WIDTH-1, w). bf16 conv state round-trips losslessly
+    through the f32 carrier."""
+    w = cfg.lru_width
+    return len(recurrent_layer_indices(cfg)) * (w + (CONV_WIDTH - 1) * w)
+
+
+def pack_state_blob(cfg, states):
+    """states: list (per rglru layer, depth order) of {"h": (B,w) f32,
+    "conv": (B,3,w) bf16} -> (B, state_blob_words) f32."""
+    parts = []
+    for st in states:
+        b = st["h"].shape[0]
+        parts.append(st["h"].astype(jnp.float32))
+        parts.append(st["conv"].astype(jnp.float32).reshape(b, -1))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unpack_state_blob(cfg, blob):
+    """(B, state_blob_words) f32 -> list of per-rglru-layer state dicts."""
+    w = cfg.lru_width
+    rows = CONV_WIDTH - 1
+    states = []
+    off = 0
+    for _ in recurrent_layer_indices(cfg):
+        h = blob[:, off:off + w]
+        off += w
+        conv = blob[:, off:off + rows * w].reshape(-1, rows, w) \
+            .astype(jnp.bfloat16)
+        off += rows * w
+        states.append({"h": h, "conv": conv})
+    return states
 
 
 def _conv1d(x, w, b, state=None):
@@ -181,7 +261,8 @@ def init_cache(cfg, batch: int, capacity: int = 0, dtype=jnp.bfloat16):
         if kind == "rglru":
             cache[f"layer_{i}"] = {
                 "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
-                "conv": jnp.zeros((batch, 3, cfg.lru_width), jnp.bfloat16),
+                "conv": jnp.zeros((batch, CONV_WIDTH - 1, cfg.lru_width),
+                                  jnp.bfloat16),
             }
         else:
             cache[f"layer_{i}"] = {

@@ -107,6 +107,33 @@ def moe_mlp(cfg, p, x, *, capacity_factor: float = 1.25,
     return out.reshape(b, s, d).astype(x.dtype), aux
 
 
+def decode_mlp(cfg, p, x):
+    """Single-token routed forward for the paged decode hot loop.
+
+    x: (B, 1, d) — one current token per engine slot. The B tokens form one
+    routing group with drop-free capacity by default (cf = n_experts), so
+    each token's expert mix depends only on the token itself — never on
+    which other requests share the decode batch. That independence is what
+    makes paged decode byte-identical to the single-request reference path
+    and keeps failover resumes deterministic. DECODE_CAPACITY_FACTOR
+    bounds expert compute instead, at the cost of rare batch-dependent
+    drops (same trade as the reference ``decode_step``).
+    """
+    cf = DECODE_CAPACITY_FACTOR or float(cfg.n_experts)
+    y, _ = moe_mlp(cfg, p, x, group_size=x.shape[0] * x.shape[1],
+                   capacity_factor=cf)
+    return y
+
+
+def serving_prefill_mlp(cfg, p, x):
+    """Routed MLP for bucket-padded serving prefill: drop-free capacity makes
+    every real token's output independent of the tail padding (a finite
+    capacity factor would let garbage padding tokens evict real tokens from
+    expert capacity slots — padding would no longer be invisible)."""
+    y, _ = moe_mlp(cfg, p, x, capacity_factor=float(cfg.n_experts))
+    return y
+
+
 # --------------------------------------------------------------------------
 # forward / prefill / decode
 # --------------------------------------------------------------------------
@@ -190,11 +217,9 @@ def decode_step(cfg, params, token, cache, pos, *, window: int = 0):
         o = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
         x = x + L.attn_out(p["attn"], o)
         h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
-        # decode: full capacity (cf = E) by default so no token is ever
-        # dropped — inference routing must be deterministic w.r.t. batching.
-        # DECODE_CAPACITY_FACTOR trades that for bounded expert compute.
-        cf = DECODE_CAPACITY_FACTOR or float(cfg.n_experts)
-        y, _ = moe_mlp(cfg, p, h, group_size=b, capacity_factor=cf)
+        # same routing as the paged serving hot loop: drop-free by default,
+        # DECODE_CAPACITY_FACTOR trades that for bounded expert compute
+        y = decode_mlp(cfg, p, h)
         return x + y, {"k": ck, "v": cv}
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))

@@ -26,8 +26,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.models import hybrid as H
 from repro.models import layers as L
+from repro.models import moe as M
 from repro.serving.sampling import sample
+
+# families the paged serving path covers (vlm/audio/ssm are not engine
+# targets: encoder-only or pure-recurrent — see serving/engine.py)
+PAGED_FAMILIES = ("dense", "moe", "hybrid")
+
+
+def kv_layer_indices(cfg):
+    """Model layer indices that carry paged KV. All layers for dense/moe;
+    only the local-attention layers of a hybrid stack (RG-LRU layers carry
+    recurrent state, replicated as blobs instead)."""
+    if cfg.arch_type == "hybrid":
+        return tuple(i for i, k in enumerate(cfg.layer_kinds())
+                     if k == "attn")
+    return tuple(range(cfg.n_layers))
+
+
+def mlp_apply(cfg, p, h, *, decode: bool):
+    """Per-family MLP for one layer of the paged path. ``p`` is that layer's
+    param dict; MoE routes through the experts (drop-free — see moe.py)."""
+    if cfg.arch_type == "moe":
+        return M.decode_mlp(cfg, p, h) if decode \
+            else M.serving_prefill_mlp(cfg, p, h)
+    return L.mlp(p["mlp"], h)
 
 
 def next_bucket(n: int, lo: int = 8) -> int:
@@ -76,7 +101,7 @@ def prefill_bucketed(cfg, params, tokens, true_len, *, q_chunk: int = 1024):
                         q_chunk=q_chunk)
         x = x + L.attn_out(p["attn"], o)
         h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
-        x = x + L.mlp(p["mlp"], h)
+        x = x + mlp_apply(cfg, p, h, decode=False)
         return x, (k[0].astype(kv_dtype(cfg)), v[0].astype(kv_dtype(cfg)))
 
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
@@ -104,6 +129,37 @@ def pack_pages(k_seq, v_seq, n_pages: int, page: int):
 # decode (paged)
 # --------------------------------------------------------------------------
 
+def _paged_attn_layer(cfg, p, x, kl, vl, block_tables, lengths, dst_block,
+                      dst_off, positions, *, norm_key: str,
+                      interpret: bool | None):
+    """One attention layer of the paged decode hot loop, shared by every
+    family: scatter this step's KV into the current page, attend via the
+    Pallas kernel, apply the family MLP. ``norm_key`` names the pre-attn
+    norm param ("norm_attn" dense/moe, "norm_t" hybrid).
+    Returns (x, kl, vl)."""
+    h = L.rms_norm(x, p[norm_key], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,{H,K},D)
+    kl = kl.at[:, dst_block, dst_off].set(
+        jnp.swapaxes(k[:, 0], 0, 1).astype(kl.dtype))    # (K,B,D) scatter
+    vl = vl.at[:, dst_block, dst_off].set(
+        jnp.swapaxes(v[:, 0], 0, 1).astype(vl.dtype))
+    o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths,
+                            interpret=interpret)
+    x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype))
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    x = x + mlp_apply(cfg, p, h, decode=True)
+    return x, kl, vl
+
+
+def _sample_head(cfg, params, x, rng, temperature):
+    """Final norm -> f32 logits -> on-device sample (shared decode tail)."""
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg,
+                       x.astype(jnp.float32))[:, 0]      # (B, V)
+    nxt = sample(logits, rng=rng, temperature=temperature)
+    return nxt, logits
+
+
 def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
                       pos, rng=None, *, temperature: float = 0.0,
                       interpret: bool | None = None):
@@ -130,23 +186,103 @@ def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
 
     def body(x, layer):
         p, (kl, vl) = layer
-        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
-        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,{H,K},D)
-        kl = kl.at[:, dst_block, dst_off].set(
-            jnp.swapaxes(k[:, 0], 0, 1).astype(kl.dtype))    # (K,B,D) scatter
-        vl = vl.at[:, dst_block, dst_off].set(
-            jnp.swapaxes(v[:, 0], 0, 1).astype(vl.dtype))
-        o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths,
-                                interpret=interpret)
-        x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype))
-        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
-        x = x + L.mlp(p["mlp"], h)
+        x, kl, vl = _paged_attn_layer(cfg, p, x, kl, vl, block_tables,
+                                      lengths, dst_block, dst_off, positions,
+                                      norm_key="norm_attn",
+                                      interpret=interpret)
         return x, (kl, vl)
 
     x, (k_pages, v_pages) = jax.lax.scan(
         body, x, (params["layers"], (k_pages, v_pages)))
-    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
-    logits = L.unembed(params["embed"], cfg,
-                       x.astype(jnp.float32))[:, 0]      # (B, V)
-    nxt = sample(logits, rng=rng, temperature=temperature)
+    nxt, logits = _sample_head(cfg, params, x, rng, temperature)
     return nxt, logits, k_pages, v_pages
+
+
+# --------------------------------------------------------------------------
+# hybrid (RG-LRU + local attention): paged KV for attn layers, state blobs
+# for the recurrence
+# --------------------------------------------------------------------------
+
+def prefill_hybrid_bucketed(cfg, params, tokens, true_len, *,
+                            q_chunk: int = 1024):
+    """Hybrid prompt forward over bucket-padded tokens.
+
+    Attention layers behave exactly like ``prefill_bucketed`` (causality
+    hides the tail padding); RG-LRU layers additionally need their decode
+    state extracted *at* ``true_len`` rather than at the padded end —
+    ``hybrid.recurrent_prefill`` does that slice.
+
+    Returns (logits (1, V) at true_len - 1,
+             k, v (L_attn, S_bucket, K, D) — attention layers only, in
+             depth order, rows >= true_len garbage as in the dense path,
+             state_blob (1, state_blob_words) f32).
+    """
+    x = L.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    q_chunk = min(q_chunk, s)
+    ks, vs, states = [], [], []
+    for p, kind in zip(params["layers"], cfg.layer_kinds()):
+        if kind == "rglru":
+            x, h, conv = H.recurrent_prefill(cfg, p, x, true_len)
+            states.append({"h": h, "conv": conv})
+        else:
+            hh = L.rms_norm(x, p["norm_t"], cfg.norm_eps)
+            q, k, v = L.qkv_proj(p["attn"], cfg, hh, positions)
+            o = L.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_chunk=q_chunk)
+            x = x + L.attn_out(p["attn"], o)
+            hh = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], hh)
+            ks.append(k[0].astype(kv_dtype(cfg)))
+            vs.append(v[0].astype(kv_dtype(cfg)))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    xt = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    logits = L.unembed(params["embed"], cfg, xt.astype(jnp.float32))
+    blob = H.pack_state_blob(cfg, states)
+    return logits[:, 0], jnp.stack(ks), jnp.stack(vs), blob
+
+
+def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
+                             block_tables, blob_slots, pos, rng=None, *,
+                             temperature: float = 0.0,
+                             interpret: bool | None = None):
+    """One hybrid decode step: paged attention for the local-attn layers
+    (pool layer axis = attn layers in depth order), O(1) RG-LRU steps for
+    the recurrent layers with state gathered from / scattered back to the
+    pool's blob store — the blob IS the source of truth, so a promoted
+    replica blob resumes byte-identically with no extra unpacking step.
+
+    token: (B,) int32; k_pages/v_pages: (L_attn, K, P, page, D);
+    blobs: (n_blobs, state_blob_words) f32; block_tables: (B, pages_per_seq);
+    blob_slots: (B,) int32 physical blob slot per engine slot (idle slots
+    point at a scratch blob); pos: (B,) int32.
+    Returns (next_token, logits, k_pages, v_pages, blobs).
+    """
+    b = token.shape[0]
+    page = k_pages.shape[3]
+    rows = jnp.arange(b)
+    dst_block = block_tables[rows, pos // page]
+    dst_off = pos % page
+    lengths = pos + 1
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
+    states = H.unpack_state_blob(cfg, blobs[blob_slots])
+    new_states = []
+    ai = ri = 0
+    for p, kind in zip(params["layers"], cfg.layer_kinds()):
+        if kind == "rglru":
+            x, st = H._recurrent_block(cfg, p, x, state=states[ri])
+            new_states.append(st)
+            ri += 1
+        else:
+            x, kl, vl = _paged_attn_layer(
+                cfg, p, x, k_pages[ai], v_pages[ai], block_tables, lengths,
+                dst_block, dst_off, positions, norm_key="norm_t",
+                interpret=interpret)
+            k_pages = k_pages.at[ai].set(kl)
+            v_pages = v_pages.at[ai].set(vl)
+            ai += 1
+    blobs = blobs.at[blob_slots].set(H.pack_state_blob(cfg, new_states))
+    nxt, logits = _sample_head(cfg, params, x, rng, temperature)
+    return nxt, logits, k_pages, v_pages, blobs

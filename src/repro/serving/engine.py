@@ -21,6 +21,13 @@ mechanisms appear here for real:
   * failover — ``fail_instance`` promotes the hosted replica blocks in
     place (``promote_replica``) and the request continues byte-identically
     on the target (tested in tests/test_engine.py).
+
+Every serving family rides this one code path. Dense and MoE differ only in
+the per-layer MLP (MoE routes each decoded token drop-free — see
+``paged_decode.mlp_apply``); the hybrid family (RecurrentGemma) pages its
+local-attention layers and carries RG-LRU recurrent state as opaque
+fixed-size blobs in the pool's blob store — dirtied every decode step,
+delta-replicated next to the KV blocks, and promoted in place on failover.
 """
 from __future__ import annotations
 
@@ -33,11 +40,20 @@ import numpy as np
 
 from repro.models import api
 from repro.models import paged_decode as PD
+from repro.models.hybrid import state_blob_words
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
 
 SCRATCH_RID = -7  # pool rid reserved for the idle-slot scratch block
+
+
+def clamped_max_seq(cfg, max_seq: int) -> int:
+    """Largest servable context for ``cfg``: the paged path attends over the
+    full block table, so windowed archs cap at the sliding window until
+    block recycling lands (open ROADMAP item). Entry points use this to
+    build an EngineConfig that passes RealInstance's guard."""
+    return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
 
 
 @dataclasses.dataclass
@@ -52,10 +68,22 @@ class EngineConfig:
 
 
 class RealInstance:
-    """One serving instance: dense-family model over a paged KV pool."""
+    """One serving instance: any paged-family model over a paged KV pool."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0):
+        if cfg.arch_type not in PD.PAGED_FAMILIES:
+            raise ValueError(
+                f"paged serving covers {PD.PAGED_FAMILIES}, not "
+                f"{cfg.arch_type!r} (encoder-only / pure-recurrent families "
+                "are not engine targets)")
+        if cfg.sliding_window and ecfg.max_seq > cfg.sliding_window:
+            raise ValueError(
+                f"max_seq {ecfg.max_seq} exceeds sliding_window "
+                f"{cfg.sliding_window}: the paged path attends over the full "
+                "block table; serving beyond the window needs block "
+                "recycling (open ROADMAP item)")
         self.cfg = cfg
+        self.family = cfg.arch_type
         self.params = params          # node-resident weights (shared ref!)
         self.ecfg = ecfg
         self.instance_id = instance_id
@@ -64,16 +92,24 @@ class RealInstance:
         page = cfg.page_size
         self.pages_per_seq = -(-S // page)
         n_blocks = ecfg.pool_blocks or (2 * B * self.pages_per_seq + 1)
+        # hybrid: recurrent state blobs ride in the pool next to the KV
+        # blocks (B primaries + B hosted replicas + 1 scratch)
+        blob_words = state_blob_words(cfg) if self.family == "hybrid" else 0
         self.pool = PagedKVPool(
-            n_blocks, page, n_layers=cfg.n_layers,
+            n_blocks, page, n_layers=len(PD.kv_layer_indices(cfg)),
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, real=True,
-            dtype=PD.kv_dtype(cfg))
+            dtype=PD.kv_dtype(cfg), blob_words=blob_words,
+            n_blobs=(2 * B + 1) if blob_words else 0)
         # idle batch slots write/attend into one scratch block, never freed
         self.scratch = self.pool.allocate(SCRATCH_RID, 1)[0].slot
         self.block_table = np.full((B, self.pages_per_seq), self.scratch,
                                    np.int32)
         self.slot_rid = [-1] * B      # request id per slot
         self.slot_pos = np.zeros(B, np.int32)
+        self.scratch_blob = 0
+        if blob_words:
+            self.scratch_blob = self.pool.allocate_blob(SCRATCH_RID).slot
+        self.slot_blob = np.full(B, self.scratch_blob, np.int32)
         self.requests: Dict[int, Request] = {}
 
         temp = ecfg.temperature
@@ -81,27 +117,47 @@ class RealInstance:
         # per-instance sampling stream (used only when temperature > 0)
         self._rng = jax.random.PRNGKey(instance_id + 1)
 
-        def _step(p, tok, k_pages, v_pages, bt, pos, rng):
-            return PD.decode_step_paged(cfg, p, tok, k_pages, v_pages, bt,
-                                        pos, rng, temperature=temp,
-                                        interpret=interp)
+        if self.family == "hybrid":
+            def _step(p, tok, k_pages, v_pages, blobs, bt, bslots, pos, rng):
+                return PD.decode_step_paged_hybrid(
+                    cfg, p, tok, k_pages, v_pages, blobs, bt, bslots, pos,
+                    rng, temperature=temp, interpret=interp)
 
-        # pool buffers are donated: decode updates pages in place
-        self._decode = jax.jit(_step, donate_argnums=(2, 3))
-        self._prefill = jax.jit(
-            lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
+            # pool buffers are donated: decode updates pages/blobs in place
+            self._decode = jax.jit(_step, donate_argnums=(2, 3, 4))
+            self._prefill = jax.jit(
+                lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
+        else:
+            def _step(p, tok, k_pages, v_pages, bt, pos, rng):
+                return PD.decode_step_paged(cfg, p, tok, k_pages, v_pages, bt,
+                                            pos, rng, temperature=temp,
+                                            interpret=interp)
+
+            # pool buffers are donated: decode updates pages in place
+            self._decode = jax.jit(_step, donate_argnums=(2, 3))
+            self._prefill = jax.jit(
+                lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
 
     # -- admission -----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_rid) if r < 0]
 
     def _allocate(self, rid: int, n_tokens: int):
-        """Allocate primary blocks, evicting hosted replicas under pressure
-        (the paper's rule: replicas are the first thing dropped)."""
+        """Allocate primary blocks (and, for hybrid, the state blob),
+        evicting hosted replicas under pressure (the paper's rule: replicas
+        are the first thing dropped)."""
         need = self.pool.blocks_for_tokens(n_tokens)
         if need > self.pool.n_free:
             self.pool.evict_replicas_for_pressure(need)
-        return self.pool.allocate(rid, n_tokens)
+        refs = self.pool.allocate(rid, n_tokens)
+        if self.family == "hybrid":
+            self.pool.evict_blob_replicas_for_pressure()
+            try:
+                self.pool.allocate_blob(rid)
+            except MemoryError:
+                self.pool.free(rid)
+                raise
+        return refs
 
     def admit(self, req: Request, now: float = 0.0) -> bool:
         slots = self.free_slots()
@@ -116,8 +172,15 @@ class RealInstance:
         bucket = PD.next_bucket(n, lo=self.pool.page_size)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt_tokens
-        logits, k_seq, v_seq = self._prefill(
-            self.params, jnp.asarray(toks), jnp.int32(n))
+        if self.family == "hybrid":
+            logits, k_seq, v_seq, blob = self._prefill(
+                self.params, jnp.asarray(toks), jnp.int32(n))
+            bref = self.pool.blob_ref(req.rid)
+            self.pool.write_blob(bref.slot, blob[0])
+            self.slot_blob[slot] = bref.slot
+        else:
+            logits, k_seq, v_seq = self._prefill(
+                self.params, jnp.asarray(toks), jnp.int32(n))
         self.pool.write_blocks([r.slot for r in refs],
                                *PD.pack_pages(k_seq, v_seq, len(refs),
                                               self.pool.page_size))
@@ -159,14 +222,23 @@ class RealInstance:
                 self.pool.evict_replicas_for_pressure(1)
                 ref = self.pool.append_token(rid)
             self.block_table[i, ref.logical_idx] = ref.slot
+            # the recurrent state advances every step -> blob always dirty
+            self.pool.mark_blob_dirty(rid)
         if self.ecfg.temperature > 0:
             self._rng, step_rng = jax.random.split(self._rng)
         else:
             step_rng = self._rng               # unused by greedy sample()
-        nxt, _, self.pool.k, self.pool.v = self._decode(
-            self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
-            jnp.asarray(self.block_table), jnp.asarray(self.slot_pos),
-            step_rng)
+        if self.family == "hybrid":
+            nxt, _, self.pool.k, self.pool.v, self.pool.blobs = self._decode(
+                self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
+                self.pool.blobs, jnp.asarray(self.block_table),
+                jnp.asarray(self.slot_blob), jnp.asarray(self.slot_pos),
+                step_rng)
+        else:
+            nxt, _, self.pool.k, self.pool.v = self._decode(
+                self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
+                jnp.asarray(self.block_table), jnp.asarray(self.slot_pos),
+                step_rng)
         nxt = np.asarray(nxt)          # the step's single host sync
         finished = []
         for i in active:
@@ -183,12 +255,13 @@ class RealInstance:
         return finished
 
     def release(self, rid: int):
-        """Free a request's engine slot + primary blocks."""
+        """Free a request's engine slot + primary blocks (+ state blob)."""
         if rid in self.requests:
             slot = self.slot_rid.index(rid)
             self.slot_rid[slot] = -1
             self.slot_pos[slot] = 0
             self.block_table[slot] = self.scratch
+            self.slot_blob[slot] = self.scratch_blob
             self.pool.free(rid)
             self.requests.pop(rid)
 
@@ -205,7 +278,9 @@ class RealInstance:
         page = self.pool.page_size
         total = meta["pos"]
         refs = self.pool.promote_replica(peer, req.rid)
-        if len(refs) < self.pool.blocks_for_tokens(total):
+        bref = self.pool.blob_ref(req.rid)
+        if len(refs) < self.pool.blocks_for_tokens(total) or \
+                (self.family == "hybrid" and bref is None):
             self.pool.free(req.rid)    # incomplete replica: can't resume
             return False
         for i, ref in enumerate(refs):
@@ -215,6 +290,9 @@ class RealInstance:
         row = np.full(self.pages_per_seq, self.scratch, np.int32)
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
+        if bref is not None:
+            bref.replicated = False
+            self.slot_blob[slot] = bref.slot
         self.slot_pos[slot] = total
         req.output_tokens = list(meta["tokens"])
         req.state = RequestState.DECODE
@@ -247,6 +325,7 @@ class RealEngine:
         self.t = 0.0
         # replication traffic accounting (bench_overhead reads these)
         self.repl_blocks_total = 0
+        self.repl_blobs_total = 0
         self.repl_bytes_total = 0
         self.repl_steps = 0
         self.active_request_steps = 0
@@ -310,6 +389,8 @@ class RealEngine:
             tgt = self.instances[tgt_id]
             src_slots: List[int] = []
             dst_slots: List[int] = []
+            blob_src: List[int] = []
+            blob_dst: List[int] = []
             for rid, req in inst.requests.items():
                 table = inst.pool.table(rid)
                 rtab = tgt.pool.replica_table(inst.instance_id, rid)
@@ -318,6 +399,13 @@ class RealEngine:
                     if not tgt.pool.host_replica(inst.instance_id, rid, need):
                         continue       # no headroom on target; retry next pass
                     rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                bref = inst.pool.blob_ref(rid)
+                rbref = None
+                if bref is not None:   # hybrid: state blob rides along
+                    if not tgt.pool.host_blob_replica(inst.instance_id, rid):
+                        tgt.pool.drop_replica(inst.instance_id, rid)
+                        continue       # KV without state can't be resumed
+                    rbref = tgt.pool.blob_replica_ref(inst.instance_id, rid)
                 for ref, rref in zip(table, rtab):
                     # copy when the primary block is dirty OR the hosted
                     # block has never received content (rref.replicated
@@ -328,6 +416,12 @@ class RealEngine:
                         dst_slots.append(rref.slot)
                         ref.replicated = True
                         rref.replicated = True
+                if bref is not None:
+                    if full or not bref.replicated or not rbref.replicated:
+                        blob_src.append(bref.slot)
+                        blob_dst.append(rbref.slot)
+                        bref.replicated = True
+                        rbref.replicated = True
                 self.replica_meta[rid] = {
                     "peer": inst.instance_id, "home": tgt_id,
                     "pos": int(inst.slot_pos[inst.slot_of(rid)]),
@@ -335,19 +429,26 @@ class RealEngine:
                 }
                 req.replicated_through = req.total_len
             inst.pool.copy_blocks_to(tgt.pool, src_slots, dst_slots)
+            inst.pool.copy_blobs_to(tgt.pool, blob_src, blob_dst)
             self.repl_blocks_total += len(src_slots)
-            self.repl_bytes_total += len(src_slots) * inst.pool.block_nbytes
+            self.repl_blobs_total += len(blob_src)
+            self.repl_bytes_total += \
+                len(src_slots) * inst.pool.block_nbytes + \
+                len(blob_src) * inst.pool.blob_nbytes
 
     def replication_stats(self) -> dict:
         steps = max(self.repl_steps, 1)
         return {
             "mode": self.ecfg.replication if self.ecfg.replicate else "off",
             "blocks_total": self.repl_blocks_total,
+            "blobs_total": self.repl_blobs_total,
             "bytes_total": self.repl_bytes_total,
             "blocks_per_step": self.repl_blocks_total / steps,
             "bytes_per_step": self.repl_bytes_total / steps,
             "blocks_per_request_step":
                 self.repl_blocks_total / max(self.active_request_steps, 1),
+            "blobs_per_request_step":
+                self.repl_blobs_total / max(self.active_request_steps, 1),
         }
 
     def fail_instance(self, instance_id: int) -> List[int]:
@@ -384,6 +485,7 @@ class RealEngine:
                     self.replica_meta.pop(rid)
                     for ref in other.pool.table(rid):
                         ref.replicated = False
+                    other.pool.mark_blob_dirty(rid)
         return resumed
 
     def run(self, max_iters: int = 1000):

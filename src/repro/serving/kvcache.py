@@ -32,6 +32,7 @@ class BlockRef:
     slot: int
     n_filled: int = 0          # tokens currently valid in this block
     replicated: bool = False   # safely copied to the replica target?
+    kind: str = "kv"           # "kv" (paged KV block) | "blob" (opaque state)
 
 
 class PagedKVPool:
@@ -48,7 +49,7 @@ class PagedKVPool:
 
     def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
                  n_kv_heads: int = 0, head_dim: int = 0, real: bool = False,
-                 dtype="bfloat16"):
+                 dtype="bfloat16", blob_words: int = 0, n_blobs: int = 0):
         self.n_blocks = n_blocks
         self.page_size = page_size
         self.real = real
@@ -56,11 +57,23 @@ class PagedKVPool:
         self._tables: Dict[int, List[BlockRef]] = {}      # rid -> blocks
         # replica blocks hosted on behalf of peers: (peer_node, rid) -> slots
         self._replica_tables: Dict[Tuple[int, int], List[BlockRef]] = {}
+        # blob store: fixed-size opaque state blobs (one per request) for
+        # non-KV per-request state — RG-LRU recurrent + conv state on the
+        # hybrid family. Blobs are replication units exactly like KV blocks:
+        # same dirty flag, same host/promote/evict lifecycle.
+        self.blob_words = blob_words
+        self.n_blobs = n_blobs
+        self._blob_free: List[int] = list(range(n_blobs))
+        self._blob_refs: Dict[int, BlockRef] = {}         # rid -> blob
+        self._blob_replicas: Dict[Tuple[int, int], BlockRef] = {}
         if real:
             assert jnp is not None
             shape = (n_layers, n_kv_heads, n_blocks, page_size, head_dim)
             self.k = jnp.zeros(shape, dtype)
             self.v = jnp.zeros(shape, dtype)
+            if n_blobs:
+                # f32 carrier: bf16 state round-trips losslessly through f32
+                self.blobs = jnp.zeros((n_blobs, blob_words), jnp.float32)
 
     @property
     def block_nbytes(self) -> int:
@@ -69,6 +82,11 @@ class PagedKVPool:
             return 0
         per_slot = self.k.size // self.n_blocks
         return 2 * per_slot * self.k.dtype.itemsize
+
+    @property
+    def blob_nbytes(self) -> int:
+        """Bytes of one blob replication message."""
+        return 4 * self.blob_words
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -132,9 +150,48 @@ class PagedKVPool:
     def free(self, rid: int):
         for ref in self._tables.pop(rid, []):
             self._free.append(ref.slot)
+        blob = self._blob_refs.pop(rid, None)
+        if blob is not None:
+            self._blob_free.append(blob.slot)
 
     def live_requests(self) -> List[int]:
         return list(self._tables)
+
+    # -- blob blocks (opaque per-request state, e.g. RG-LRU recurrence) ------
+    def allocate_blob(self, rid: int) -> BlockRef:
+        """One fixed-size blob per request; raises MemoryError when the blob
+        store is full (caller evicts replicas first, like KV allocation)."""
+        assert rid not in self._blob_refs, "rid already owns a blob"
+        if not self._blob_free:
+            raise MemoryError("blob store exhausted")
+        ref = BlockRef(rid, 0, self._blob_free.pop(), kind="blob")
+        self._blob_refs[rid] = ref
+        return ref
+
+    def blob_ref(self, rid: int) -> Optional[BlockRef]:
+        return self._blob_refs.get(rid)
+
+    def mark_blob_dirty(self, rid: int):
+        """Decode mutated this request's recurrent state in place."""
+        ref = self._blob_refs.get(rid)
+        if ref is not None:
+            ref.replicated = False
+
+    def host_blob_replica(self, peer: int, rid: int) -> bool:
+        """Reserve one blob slot for a peer's replicated state. Never raises."""
+        if (peer, rid) in self._blob_replicas:
+            return True
+        if not self._blob_free:
+            return False
+        self._blob_replicas[(peer, rid)] = BlockRef(
+            rid, 0, self._blob_free.pop(), kind="blob")
+        return True
+
+    def blob_replica_ref(self, peer: int, rid: int) -> Optional[BlockRef]:
+        return self._blob_replicas.get((peer, rid))
+
+    def replica_blobs_used(self) -> int:
+        return len(self._blob_replicas)
 
     # -- replica hosting -------------------------------------------------------
     def host_replica(self, peer: int, rid: int, n_blocks: int) -> bool:
@@ -157,6 +214,9 @@ class PagedKVPool:
     def drop_replica(self, peer: int, rid: int):
         for ref in self._replica_tables.pop((peer, rid), []):
             self._free.append(ref.slot)
+        blob = self._blob_replicas.pop((peer, rid), None)
+        if blob is not None:
+            self._blob_free.append(blob.slot)
 
     def drop_all_replicas_from(self, peer: int):
         for key in [k for k in self._replica_tables if k[0] == peer]:
@@ -175,14 +235,30 @@ class PagedKVPool:
             freed += n
         return freed
 
+    def evict_blob_replicas_for_pressure(self) -> int:
+        """Blob-store pressure: drop hosted replica tables (KV + blob
+        together — a partial replica cannot be resumed from) until a blob
+        slot frees up. Returns replica tables dropped."""
+        dropped = 0
+        for key in list(self._blob_replicas):
+            if self._blob_free:
+                break
+            self.drop_replica(*key)
+            dropped += 1
+        return dropped
+
     def promote_replica(self, peer: int, rid: int) -> List[BlockRef]:
         """Failure path: the replicated request resumes *here* — the hosted
-        replica blocks become this pool's primary blocks for rid."""
+        replica blocks become this pool's primary blocks for rid. A hosted
+        state blob (hybrid family) is promoted alongside the KV blocks."""
         refs = self._replica_tables.pop((peer, rid), [])
         assert rid not in self._tables, "rid already live on this node"
         for i, ref in enumerate(refs):
             ref.logical_idx = i
         self._tables[rid] = refs
+        blob = self._blob_replicas.pop((peer, rid), None)
+        if blob is not None:
+            self._blob_refs[rid] = blob
         return refs
 
     # -- real-buffer block IO (used by the real-compute engine + tests) -----
@@ -221,9 +297,32 @@ class PagedKVPool:
         vb = self.v[:, :, src]
         other.k, other.v = _scatter_blocks(other.k, other.v, dst, kb, vb)
 
+    # -- real-buffer blob IO --------------------------------------------------
+    def write_blob(self, slot: int, vec):
+        """vec: (blob_words,) f32."""
+        assert self.real and self.n_blobs
+        self.blobs = self.blobs.at[slot].set(vec.astype(jnp.float32))
+
+    def read_blob(self, slot: int):
+        assert self.real and self.n_blobs
+        return self.blobs[slot]
+
+    def copy_blobs_to(self, other: "PagedKVPool",
+                      src_slots: List[int], dst_slots: List[int]):
+        """Batched blob replication (this step's dirty recurrent states)."""
+        if not (self.real and other.real) or not src_slots:
+            return
+        src = jnp.asarray(src_slots, jnp.int32)
+        dst = jnp.asarray(dst_slots, jnp.int32)
+        other.blobs = _scatter_blobs(other.blobs, dst, self.blobs[src])
+
 
 if jax is not None:
     @jax.jit
     def _scatter_blocks(k_pool, v_pool, slots, k_blocks, v_blocks):
         return (k_pool.at[:, :, slots].set(k_blocks),
                 v_pool.at[:, :, slots].set(v_blocks))
+
+    @jax.jit
+    def _scatter_blobs(blob_pool, slots, blobs):
+        return blob_pool.at[slots].set(blobs)

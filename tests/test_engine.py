@@ -1,4 +1,5 @@
-"""Real-compute engine: KV replication failover must be byte-identical."""
+"""Real-compute engine: KV replication failover must be byte-identical —
+for every paged family (dense, MoE, hybrid incl. RG-LRU state blobs)."""
 import numpy as np
 import pytest
 
@@ -159,6 +160,123 @@ def test_failover_byte_identical_after_replica_eviction(cfg):
     for rf, rn in zip(failed, normal):
         assert rf.output_tokens == rn.output_tokens
     assert all(r.n_retries == 0 for r in failed)
+
+
+def _failover_run(cfg, max_seq: int, fail: bool, steps_before_fail: int = 6):
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=max_seq),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, prompt=10, out=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(steps_before_fail):
+        eng.step()
+    if fail:
+        victims = list(eng.instances[0].requests)
+        resumed = eng.fail_instance(0)
+        assert set(resumed) == set(victims)
+    eng.run(2000)
+    return reqs
+
+
+def test_moe_failover_byte_identical():
+    """MoE on the paged path: kill an instance mid-decode; migrated requests
+    must produce exactly the failure-free token stream (replicated KV blocks
+    feed the routed decode identically on the promoted target)."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    normal = _failover_run(cfg, max_seq=64, fail=False)
+    failed = _failover_run(cfg, max_seq=64, fail=True)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)
+
+
+def test_hybrid_failover_byte_identical():
+    """Hybrid on the paged path: the promoted replica must carry BOTH the
+    local-attention KV blocks and the RG-LRU state blob; generation resumes
+    byte-identically from the promoted recurrent state."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    normal = _failover_run(cfg, max_seq=64, fail=False)
+    failed = _failover_run(cfg, max_seq=64, fail=True)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)
+
+
+def test_hybrid_failover_promotes_state_blob():
+    """The RG-LRU resume mechanism itself: at failure time the target's
+    hosted blob is promoted in place (no copy) and its payload is
+    byte-identical to the dead instance's primary blob."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=64),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, prompt=10, out=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    src, tgt = eng.instances
+    victims = list(src.requests)
+    assert victims
+    assert tgt.pool.replica_blobs_used() == len(victims)
+    # replication ran after the last decode -> hosted blob payloads current
+    frozen = {rid: np.asarray(src.pool.read_blob(src.pool.blob_ref(rid).slot))
+              for rid in victims}
+    resumed = eng.fail_instance(0)
+    assert set(resumed) == set(victims)
+    for rid in victims:
+        bref = tgt.pool.blob_ref(rid)
+        assert bref is not None                  # blob promoted to primary
+        assert tgt.pool.blob_replica_ref(0, rid) is None
+        assert not bref.replicated               # re-replicates to new target
+        np.testing.assert_array_equal(
+            np.asarray(tgt.pool.read_blob(bref.slot)), frozen[rid])
+    eng.run(2000)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    assert all(r.n_retries == 0 for r in reqs)
+
+
+def test_hybrid_delta_traffic_one_block_plus_blob():
+    """Hybrid steady-state replication: per active request per step, at most
+    ONE dirty KV block (the page absorbing the step's token) plus exactly
+    ONE state blob (the recurrence advances every step)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, prompt=20, out=20)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):                       # admit + initial prompt copy
+        eng.step()
+    for _ in range(5):                       # steady-state decode
+        n_active = sum(len(i.requests) for i in eng.instances)
+        kv_before, blob_before = eng.repl_blocks_total, eng.repl_blobs_total
+        eng.step()
+        kv_delta = eng.repl_blocks_total - kv_before
+        blob_delta = eng.repl_blobs_total - blob_before
+        assert 0 < kv_delta <= n_active
+        assert blob_delta == n_active, (
+            f"every active request's blob is dirty each step: copied "
+            f"{blob_delta} for {n_active} active")
+    stats = eng.replication_stats()
+    assert stats["blocks_per_request_step"] <= 1.5
+    assert stats["blobs_per_request_step"] <= 1.0
+
+
+def test_sliding_window_guard():
+    """Until paged block recycling lands, serving past the sliding window
+    would silently change attention semantics — the engine must refuse."""
+    cfg = get_config("recurrentgemma-9b").reduced()     # window 64 reduced
+    with pytest.raises(ValueError, match="sliding_window"):
+        RealEngine(cfg, EngineConfig(max_slots=2, max_seq=128),
+                   n_instances=1)
+
+
+def test_unsupported_family_rejected():
+    cfg = get_config("mamba2-130m").reduced()           # pure-recurrent ssm
+    with pytest.raises(ValueError, match="paged serving"):
+        RealEngine(cfg, EngineConfig(max_slots=2, max_seq=64), n_instances=1)
 
 
 def test_temperature_sampling_runs(cfg):

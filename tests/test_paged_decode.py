@@ -1,5 +1,6 @@
-"""Paged decode fast path: equivalence with the dense ragged decode path,
-prefill bucketing exactness, and page packing round-trips."""
+"""Paged decode fast path: equivalence with each family's reference decode
+path (dense ragged, MoE routed, hybrid RG-LRU), prefill bucketing exactness,
+and page packing round-trips."""
 import dataclasses
 
 import jax
@@ -9,6 +10,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import api
+from repro.models import hybrid as HY
+from repro.models import moe as M
 from repro.models import paged_decode as PD
 from repro.models import transformer as T
 from repro.serving.engine import EngineConfig, RealEngine
@@ -83,6 +86,86 @@ def test_paged_engine_matches_dense_ragged_byte_identical(cfg):
         assert got == ref, f"request {i}: paged != dense"
 
 
+def _moe_greedy(cfg, params, prompt, n_new):
+    """Reference MoE path: dense slot cache + routed decode_step. Prefill
+    runs drop-free (cf = n_experts) to match serving semantics — with a
+    finite capacity factor, routing would depend on which other tokens share
+    the batch and no padding-invariant comparison is possible."""
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache, pos = M.prefill(cfg, params, toks,
+                                   capacity_factor=float(cfg.n_experts))
+    out = [int(jnp.argmax(logits[0]))]
+    step = jax.jit(lambda p, t, c, q: M.decode_step(
+        cfg, p, t, c, q, window=cfg.sliding_window))
+    pos = np.int32(pos)
+    for _ in range(n_new - 1):
+        logits, cache = step(params, jnp.asarray([out[-1]], jnp.int32),
+                             cache, jnp.asarray(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def _hybrid_greedy(cfg, params, prompt, n_new):
+    """Reference hybrid path: ring-buffer KV + RG-LRU state dicts."""
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache, pos = HY.prefill(cfg, params, toks)
+    out = [int(jnp.argmax(logits[0]))]
+    step = jax.jit(lambda p, t, c, q: HY.decode_step(cfg, p, t, c, q))
+    pos = np.int32(pos)
+    for _ in range(n_new - 1):
+        logits, cache = step(params, jnp.asarray([out[-1]], jnp.int32),
+                             cache, jnp.asarray(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def test_paged_engine_matches_moe_reference_byte_identical():
+    """MoE rides the same paged fast path: Pallas attention over block
+    tables + the drop-free routed MLP must reproduce the reference routed
+    decode exactly (f32 isolates the algorithm, as in the dense test)."""
+    cfg32 = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                                dtype="float32", kv_dtype="float32")
+    max_seq, n_new = 64, 12
+    eng = RealEngine(cfg32, EngineConfig(max_slots=4, max_seq=max_seq,
+                                         replicate=False),
+                     n_instances=1, seed=0)
+    prompts = _prompts(cfg32, 3, seed=2)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt_len=len(p), max_new_tokens=n_new,
+                           arrival_time=0.0, prompt_tokens=p))
+    done = eng.run(200)
+    assert len(done) == 3
+    for i, p in enumerate(prompts):
+        ref = _moe_greedy(cfg32, eng.params, p, n_new)
+        got = next(r for r in done if r.rid == i).output_tokens
+        assert got == ref, f"request {i}: paged moe != routed reference"
+
+
+def test_paged_engine_matches_hybrid_reference_byte_identical():
+    """Hybrid rides the paged fast path with RG-LRU state in pool blobs:
+    tokens must match the reference recurrent decode exactly — any blob
+    pack/unpack or state-threading bug shifts the recurrence far beyond f32
+    noise."""
+    cfg32 = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                                dtype="float32", kv_dtype="float32")
+    max_seq, n_new = 64, 12
+    eng = RealEngine(cfg32, EngineConfig(max_slots=4, max_seq=max_seq,
+                                         replicate=False),
+                     n_instances=1, seed=0)
+    prompts = _prompts(cfg32, 3, seed=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt_len=len(p), max_new_tokens=n_new,
+                           arrival_time=0.0, prompt_tokens=p))
+    done = eng.run(200)
+    assert len(done) == 3
+    for i, p in enumerate(prompts):
+        ref = _hybrid_greedy(cfg32, eng.params, p, n_new)
+        got = next(r for r in done if r.rid == i).output_tokens
+        assert got == ref, f"request {i}: paged hybrid != recurrent reference"
+
+
 def test_paged_noise_within_bf16_ulp(cfg):
     """Under production bf16 storage the paged and dense paths must agree
     to bf16 precision: every greedy token the paged engine picks carries a
@@ -133,6 +216,61 @@ def test_prefill_bucketed_matches_unpadded(cfg, params):
     np.testing.assert_array_equal(
         np.asarray(k_b[:, :n], np.float32),
         np.asarray(cache_u["k"][:, 0, :n], np.float32))
+
+
+def test_prefill_hybrid_bucketed_matches_unpadded():
+    """Hybrid bucket padding must be invisible: same last-token logits, same
+    attention KV rows, and the SAME packed RG-LRU state (h at true_len - 1,
+    conv window ending at true_len) as the unpadded reference prefill."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(4)
+    n = 13
+    prompt = rng.integers(1, cfg.vocab_size, n)
+    bucket = PD.next_bucket(n, lo=cfg.page_size)
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :n] = prompt
+
+    logits_b, k_b, v_b, blob = PD.prefill_hybrid_bucketed(
+        cfg, params, jnp.asarray(padded), n)
+    logits_u, cache_u, pos = HY.prefill(
+        cfg, params, jnp.asarray(prompt[None], jnp.int32))
+    assert int(pos) == n
+    assert int(jnp.argmax(logits_b[0])) == int(jnp.argmax(logits_u[0]))
+    np.testing.assert_allclose(np.asarray(logits_b, np.float32),
+                               np.asarray(logits_u, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # attention layers' KV rows [0, n) identical
+    attn_idx = [i for i, k in enumerate(cfg.layer_kinds()) if k == "attn"]
+    for j, li in enumerate(attn_idx):
+        np.testing.assert_array_equal(
+            np.asarray(k_b[j, :n], np.float32),
+            np.asarray(cache_u[f"layer_{li}"]["k"][0, :n], np.float32))
+    # recurrent state: the blob must pack exactly the unpadded decode state
+    rec_states = [cache_u[f"layer_{i}"]
+                  for i in HY.recurrent_layer_indices(cfg)]
+    ref_blob = HY.pack_state_blob(cfg, rec_states)
+    np.testing.assert_array_equal(np.asarray(blob), np.asarray(ref_blob))
+
+
+def test_state_blob_roundtrip():
+    """pack -> unpack must be lossless (f32 h exact, bf16 conv exact)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    rng = np.random.default_rng(0)
+    n_rec = len(HY.recurrent_layer_indices(cfg))
+    states = [{"h": jnp.asarray(rng.standard_normal((2, cfg.lru_width)),
+                                jnp.float32),
+               "conv": jnp.asarray(rng.standard_normal((2, 3, cfg.lru_width)),
+                                   jnp.bfloat16)}
+              for _ in range(n_rec)]
+    blob = HY.pack_state_blob(cfg, states)
+    assert blob.shape == (2, HY.state_blob_words(cfg))
+    back = HY.unpack_state_blob(cfg, blob)
+    for st, bk in zip(states, back):
+        np.testing.assert_array_equal(np.asarray(st["h"]), np.asarray(bk["h"]))
+        np.testing.assert_array_equal(
+            np.asarray(st["conv"], np.float32),
+            np.asarray(bk["conv"], np.float32))
 
 
 def test_pack_pages_layout(cfg):

@@ -1,0 +1,93 @@
+"""Documentation link checker (``make docs-check``).
+
+Two guarantees, CI-enforced:
+
+  1. every intra-repo link in every tracked ``*.md`` file resolves to a real
+     file (anchors are stripped; external http(s)/mailto links are ignored);
+  2. every page under ``docs/`` is reachable from ``docs/architecture.md``
+     by following intra-repo markdown links — the architecture page is the
+     table of contents, so a doc nobody links from it is a doc nobody finds.
+
+Exit status 0 = clean; 1 = problems (each printed one per line).
+
+  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — excludes images via the negative lookbehind on '!'
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+ROOT_DOC = os.path.join("docs", "architecture.md")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def markdown_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.relpath(os.path.join(dirpath, name), root)
+
+
+def intra_repo_links(root: str, md_rel: str):
+    """Yield (target_rel, raw) for each intra-repo link in md_rel."""
+    with open(os.path.join(root, md_rel), encoding="utf-8") as f:
+        text = f.read()
+    for raw in LINK_RE.findall(text):
+        if raw.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = raw.split("#", 1)[0]
+        if not target:
+            continue
+        base = root if target.startswith("/") else \
+            os.path.dirname(os.path.join(root, md_rel))
+        yield os.path.relpath(
+            os.path.normpath(os.path.join(base, target.lstrip("/"))),
+            root), raw
+
+
+def main(root: str = ".") -> int:
+    root = os.path.abspath(root)
+    problems = []
+    mds = sorted(markdown_files(root))
+
+    # 1. all intra-repo links resolve
+    graph = {}
+    for md in mds:
+        targets = []
+        for target, raw in intra_repo_links(root, md):
+            if not os.path.exists(os.path.join(root, target)):
+                problems.append(f"{md}: broken link -> {raw}")
+            targets.append(target)
+        graph[md] = targets
+
+    # 2. every docs/*.md reachable from docs/architecture.md
+    if ROOT_DOC not in graph:
+        problems.append(f"missing {ROOT_DOC} (the docs entry point)")
+    else:
+        seen = {ROOT_DOC}
+        frontier = [ROOT_DOC]
+        while frontier:
+            page = frontier.pop()
+            for target in graph.get(page, []):
+                if target.endswith(".md") and target not in seen:
+                    seen.add(target)
+                    frontier.append(target)
+        for md in mds:
+            if md.startswith("docs" + os.sep) and md not in seen:
+                problems.append(
+                    f"{md}: not reachable from {ROOT_DOC} — link it")
+
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"docs-check: {len(mds)} markdown files, all links resolve, "
+              f"all docs reachable from {ROOT_DOC}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
