@@ -1,11 +1,15 @@
 PYTHON ?= python
 
-.PHONY: check test bench-paged serve docs-check
+.PHONY: check test test-slow bench-paged serve docs-check
 
 check: test docs-check
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+# chaos failover drills + deep property sweeps (non-blocking CI job)
+test-slow:
+	PYTHONPATH=src $(PYTHON) -m pytest -q -m slow --runslow
 
 docs-check:
 	$(PYTHON) tools/check_docs.py

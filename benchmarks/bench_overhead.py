@@ -16,6 +16,8 @@ from benchmarks.common import emit, fmt_row, run_scenario
 HEADER = "bench,cluster,rps,lat_base,lat_repl,overhead_avg_pct,overhead_p99_pct"
 TRAFFIC_HEADER = ("bench,arch,mode,blocks_per_step,bytes_per_step,"
                   "blocks_per_request_step,blobs_per_request_step,bytes_total")
+RECYCLING_HEADER = ("bench,arch,max_seq,peak_resident_blocks,resident_bound,"
+                    "unrecycled_blocks,retire_msgs,blocks_per_request_step")
 
 # one arch per paged family: dense, MoE (routed MLP, same KV), hybrid
 # (paged local attention + RG-LRU state blobs)
@@ -41,13 +43,11 @@ def replication_traffic(mode: str, arch: str = "llama3-8b",
     """Run the real paged engine and read its replication counters."""
     import numpy as np
     from repro.configs import get_config
-    from repro.serving.engine import (EngineConfig, RealEngine,
-                                      clamped_max_seq)
+    from repro.serving.engine import EngineConfig, RealEngine
     from repro.serving.request import Request
 
     cfg = get_config(arch).reduced()
-    eng = RealEngine(cfg, EngineConfig(max_slots=4,
-                                       max_seq=clamped_max_seq(cfg, 96),
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=96,
                                        replication=mode),
                      n_instances=2, seed=0)
     rng = np.random.default_rng(0)
@@ -62,6 +62,61 @@ def replication_traffic(mode: str, arch: str = "llama3-8b",
     stats["live_cache_blocks_per_request"] = \
         eng.instances[0].pool.blocks_for_tokens(prompt + out)
     return stats
+
+
+# sliding-window archs (reduced window = 64): serve to 2x the window and
+# measure what recycling buys — resident blocks per request stay bounded by
+# ceil(window/page)+1 while the sequence runs arbitrarily past the window
+RECYCLING_ARCHS = ("mixtral-8x7b", "recurrentgemma-9b")
+
+
+def recycling_traffic(arch: str, n_requests: int = 2):
+    """Serve a windowed arch at max_seq = 2x sliding_window and record the
+    recycling behaviour: peak resident KV blocks per request (vs the
+    unrecycled footprint), retire-message count, and replication traffic."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config(arch).reduced()
+    window = cfg.sliding_window
+    max_seq = 2 * window
+    prompt = 16
+    out = max_seq - prompt - 8          # run well past the window
+    eng = RealEngine(cfg, EngineConfig(max_slots=2, max_seq=max_seq),
+                     n_instances=2, seed=0)
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        eng.submit(Request(
+            rid=i, prompt_len=prompt, max_new_tokens=out, arrival_time=0.0,
+            prompt_tokens=rng.integers(1, cfg.vocab_size, prompt).tolist()))
+    peak_resident = 0
+    for _ in range(1200):
+        eng.step()
+        for inst in eng.instances:
+            for rid in inst.pool.live_requests():
+                if rid >= 0:            # skip the scratch pseudo-request
+                    peak_resident = max(peak_resident,
+                                        len(inst.pool.table(rid)))
+        if not eng.waiting and not any(i.requests for i in eng.instances):
+            break
+    stats = eng.replication_stats()
+    page = cfg.page_size
+    return {
+        "window": window,
+        "max_seq": max_seq,
+        "page_size": page,
+        "tokens_per_request": prompt + out,
+        "peak_resident_blocks_per_request": peak_resident,
+        "resident_bound": -(-window // page) + 1,
+        "unrecycled_blocks_per_request": -(-(prompt + out) // page),
+        "retire_msgs_total": stats["retire_msgs_total"],
+        "blocks_per_request_step": stats["blocks_per_request_step"],
+        "blobs_per_request_step": stats["blobs_per_request_step"],
+        "bytes_per_step": stats["bytes_per_step"],
+        "bytes_total": stats["bytes_total"],
+    }
 
 
 def main(fast: bool = True):
@@ -103,7 +158,22 @@ def main(fast: bool = True):
             else f"replication_traffic_{arch.replace('-', '_')}"
         update_bench_json(section, traffic)
     emit(trows, TRAFFIC_HEADER)
-    return rows + trows
+
+    # sliding-window recycling: resident footprint + traffic at 2x window
+    rrows = []
+    recycling = {}
+    for arch in RECYCLING_ARCHS:
+        s = recycling_traffic(arch)
+        recycling[arch] = s
+        rrows.append(fmt_row("recycling", arch, s["max_seq"],
+                             s["peak_resident_blocks_per_request"],
+                             s["resident_bound"],
+                             s["unrecycled_blocks_per_request"],
+                             s["retire_msgs_total"],
+                             round(s["blocks_per_request_step"], 3)))
+    update_bench_json("recycling", recycling)
+    emit(rrows, RECYCLING_HEADER)
+    return rows + trows + rrows
 
 
 if __name__ == "__main__":

@@ -65,12 +65,13 @@ def run_sim(args):
 def run_real(args):
     """Real-compute failover drill on any paged family."""
     from repro.configs import get_config
-    from repro.serving.engine import (EngineConfig, RealEngine,
-                                      clamped_max_seq)
+    from repro.serving.engine import EngineConfig, RealEngine
     from repro.serving.request import Request
 
     cfg = get_config(args.arch).reduced()
-    max_seq = clamped_max_seq(cfg, 96)
+    # 96 > the reduced sliding windows (64): windowed archs no longer cap
+    # max_seq — block recycling keeps only the window resident
+    max_seq = 96
     n_req, prompt, out = 6, 10, 24
 
     def run(fail: bool):

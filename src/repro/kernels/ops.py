@@ -18,15 +18,17 @@ def _default_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, starts=None,
                     interpret: bool | None = None):
-    """Decode attention over a block-paged KV pool. See kernel docstring."""
+    """Decode attention over a block-paged KV pool. ``starts`` (optional,
+    (B,) int32) masks positions below a per-sequence window start — the
+    sliding-window recycling path. See kernel docstring."""
     if interpret is None:
         interpret = _default_interpret()
     assert q.ndim == 3 and k_pages.ndim == 4
     assert q.shape[1] % k_pages.shape[0] == 0, "H must be a multiple of K"
     return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
-                               interpret=interpret)
+                               starts, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -29,7 +29,7 @@ LANES = 128
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref,            # scalar prefetch
+def _kernel(bt_ref, len_ref, start_ref,  # scalar prefetch
             q_ref, k_ref, v_ref,        # VMEM inputs
             o_ref,                      # VMEM output
             m_ref, l_ref, acc_ref):     # VMEM scratch
@@ -52,15 +52,20 @@ def _kernel(bt_ref, len_ref,            # scalar prefetch
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    # mask tokens beyond this sequence's length
+    # mask tokens beyond this sequence's length AND below its window start
+    # (sliding-window recycling: positions are window-relative; resident
+    # pages can carry a stale prefix older than the attention window)
     pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (rep, page), 1)
-    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+    valid = (pos >= start_ref[b]) & (pos < len_ref[b])
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[:, :1]                                  # (rep, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)                        # (rep, 1)
-    p = jnp.exp(s - m_new)                                 # (rep, page)
+    # the where keeps fully-masked pages exact: with m_new still NEG_INF,
+    # exp(s - m_new) == exp(0) would otherwise leak weight 1 per token
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)          # (rep, page)
     l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())),
@@ -74,32 +79,37 @@ def _kernel(bt_ref, len_ref,            # scalar prefetch
                       jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, starts=None,
                     *, interpret: bool = False):
     """q: (B, H, D); k_pages/v_pages: (K, P, page, D);
-    block_tables: (B, pages_per_seq) int32; lengths: (B,) int32.
+    block_tables: (B, pages_per_seq) int32; lengths: (B,) int32;
+    starts: optional (B,) int32 lower bound — positions < starts[b] are
+    masked out (sliding-window serving passes the window start relative to
+    the first resident page; None ≡ zeros, the full-prefix behaviour).
     Returns (B, H, D)."""
     b, h, d = q.shape
     kheads, n_phys, page, _ = k_pages.shape
     rep = h // kheads
     pages_per_seq = block_tables.shape[1]
     qr = q.reshape(b, kheads, rep, d)
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
 
     grid = (b, kheads, pages_per_seq)
 
-    def q_map(b_, k_, i_, bt, ln):
+    def q_map(b_, k_, i_, bt, ln, st):
         return (b_, k_, 0, 0)
 
-    def kv_map(b_, k_, i_, bt, ln):
+    def kv_map(b_, k_, i_, bt, ln, st):
         return (k_, bt[b_, i_], 0, 0)
 
-    def o_map(b_, k_, i_, bt, ln):
+    def o_map(b_, k_, i_, bt, ln, st):
         return (b_, k_, 0, 0)
 
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((None, None, rep, d), q_map),
@@ -115,5 +125,5 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kheads, rep, d), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, qr, k_pages, v_pages)
+    )(block_tables, lengths, starts, qr, k_pages, v_pages)
     return out.reshape(b, h, d)

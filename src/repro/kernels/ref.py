@@ -5,13 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                        starts=None):
     """Decode attention over a block-paged KV pool.
 
     q:            (B, H, D)            one query token per sequence
     k_pages/v_pages: (K, P, page, D)   pool: kv-head major, P physical pages
     block_tables: (B, pages_per_seq) int32 physical page per logical page
     lengths:      (B,) int32           valid tokens per sequence
+    starts:       optional (B,) int32  window start per sequence — positions
+                  < starts[b] are masked out (at least one position must stay
+                  valid, i.e. starts[b] < lengths[b])
     Returns (B, H, D).
     """
     b, h, d = q.shape
@@ -29,7 +33,10 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
         vq = jnp.repeat(vi, rep, axis=0)
         s = jnp.einsum("hd,hsd->hs", q[i].astype(jnp.float32),
                        kq.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
-        mask = jnp.arange(pages_per_seq * page) < lengths[i]
+        pos = jnp.arange(pages_per_seq * page)
+        mask = pos < lengths[i]
+        if starts is not None:
+            mask &= pos >= starts[i]
         s = jnp.where(mask[None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         out.append(jnp.einsum("hs,hsd->hd", p, vq.astype(jnp.float32)))

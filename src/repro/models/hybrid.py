@@ -286,9 +286,12 @@ def prefill(cfg, params, tokens, *, capacity: int = 0, q_chunk: int = 1024, **_)
             x, (k, v) = _attn_block(cfg, p, x, positions, q_chunk=q_chunk)
             keep = min(cap, s)
             pad = cap - keep
+            # honor the config's KV storage dtype (f32 equivalence tests
+            # rely on the cache not silently rounding to bf16)
+            kdt = L.kv_cache_dtype(cfg)
             cache[f"layer_{i}"] = {
-                "k": _pad(k[:, s - keep:].astype(jnp.bfloat16), pad),
-                "v": _pad(v[:, s - keep:].astype(jnp.bfloat16), pad),
+                "k": _pad(k[:, s - keep:].astype(kdt), pad),
+                "v": _pad(v[:, s - keep:].astype(kdt), pad),
             }
     x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
     logits = L.unembed(params["embed"], cfg, x[:, -1:])

@@ -23,6 +23,14 @@ def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
     return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
 
 
+def kv_cache_dtype(cfg):
+    """Unquantized KV-cache carrier dtype: cfg.kv_dtype, except int8
+    configs keep bf16 payloads on paths that carry no quantization scales
+    (the paged pool and the model-level reference caches — the quantized
+    kernel is wired separately in kernels/paged_attention_int8)."""
+    return jnp.bfloat16 if cfg.kv_dtype == "int8" else jnp.dtype(cfg.kv_dtype)
+
+
 def rms_norm(x, weight, eps: float = 1e-5):
     dt = x.dtype
     x = x.astype(jnp.float32)

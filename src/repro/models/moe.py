@@ -189,8 +189,11 @@ def prefill(cfg, params, tokens, *, capacity: Optional[int] = None,
         x, a, (k, v) = _block(cfg, p, x, positions, window=window,
                               q_chunk=q_chunk, capacity_factor=capacity_factor)
         keep = min(capacity, s)
-        entry = {"k": T._pad_seq(k[:, s - keep:].astype(jnp.bfloat16), capacity - keep),
-                 "v": T._pad_seq(v[:, s - keep:].astype(jnp.bfloat16), capacity - keep)}
+        # honor the config's KV storage dtype (f32 equivalence tests rely
+        # on the cache not silently rounding to bf16)
+        kdt = L.kv_cache_dtype(cfg)
+        entry = {"k": T._pad_seq(k[:, s - keep:].astype(kdt), capacity - keep),
+                 "v": T._pad_seq(v[:, s - keep:].astype(kdt), capacity - keep)}
         return (x, aux + a), entry
 
     (x, _), cache = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])

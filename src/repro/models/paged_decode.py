@@ -63,10 +63,22 @@ def next_bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def table_pages(cfg, max_seq: int) -> int:
+    """Block-table width (pages per slot) for serving ``max_seq``.
+
+    Windowed archs recycle pages out of the attention window, so the table
+    only ever holds the resident ring: ceil(window/page) + 1 pages (the
+    window can straddle a page boundary). Unwindowed archs keep the whole
+    sequence resident."""
+    full = -(-max_seq // cfg.page_size)
+    if not cfg.sliding_window:
+        return full
+    return min(full, -(-cfg.sliding_window // cfg.page_size) + 1)
+
+
 def kv_dtype(cfg):
-    """Paged-pool storage dtype (the int8 pool path keeps bf16 here; the
-    quantized kernel is wired separately in kernels/paged_attention_int8)."""
-    return jnp.bfloat16 if cfg.kv_dtype == "int8" else jnp.dtype(cfg.kv_dtype)
+    """Paged-pool storage dtype (see layers.kv_cache_dtype)."""
+    return L.kv_cache_dtype(cfg)
 
 
 def init_pages(cfg, n_blocks: int, page_size: int, dtype=None):
@@ -131,11 +143,13 @@ def pack_pages(k_seq, v_seq, n_pages: int, page: int):
 
 def _paged_attn_layer(cfg, p, x, kl, vl, block_tables, lengths, dst_block,
                       dst_off, positions, *, norm_key: str,
-                      interpret: bool | None):
+                      interpret: bool | None, starts=None):
     """One attention layer of the paged decode hot loop, shared by every
     family: scatter this step's KV into the current page, attend via the
     Pallas kernel, apply the family MLP. ``norm_key`` names the pre-attn
-    norm param ("norm_attn" dense/moe, "norm_t" hybrid).
+    norm param ("norm_attn" dense/moe, "norm_t" hybrid). ``starts`` is the
+    per-slot window start relative to the first resident page (sliding-
+    window recycling); None means attend from position 0.
     Returns (x, kl, vl)."""
     h = L.rms_norm(x, p[norm_key], cfg.norm_eps)
     q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,{H,K},D)
@@ -143,7 +157,7 @@ def _paged_attn_layer(cfg, p, x, kl, vl, block_tables, lengths, dst_block,
         jnp.swapaxes(k[:, 0], 0, 1).astype(kl.dtype))    # (K,B,D) scatter
     vl = vl.at[:, dst_block, dst_off].set(
         jnp.swapaxes(v[:, 0], 0, 1).astype(vl.dtype))
-    o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths,
+    o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths, starts,
                             interpret=interpret)
     x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype))
     h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
@@ -160,27 +174,54 @@ def _sample_head(cfg, params, x, rng, temperature):
     return nxt, logits
 
 
+def _window_addressing(cfg, page: int, block_tables, pos, base):
+    """Shared decode addressing: where this step's KV lands and what the
+    kernel may attend to, in WINDOW-RELATIVE coordinates.
+
+    ``base`` (B,) int32 is the absolute position of each slot's first
+    resident page (always 0 on unwindowed archs / when None). Block tables
+    are packed window-relative: column j holds logical page base//page + j.
+    Returns (dst_block, dst_off, lengths, starts) — lengths/starts are
+    relative to ``base``; ``starts`` masks the stale intra-page prefix older
+    than the sliding window (None when the arch has no window)."""
+    b = pos.shape[0]
+    rows = jnp.arange(b)
+    if base is None:
+        base = jnp.zeros_like(pos)
+    rel = pos - base
+    dst_block = block_tables[rows, rel // page]          # (B,) physical slots
+    dst_off = rel % page
+    lengths = rel + 1
+    starts = None
+    if cfg.sliding_window:
+        starts = jnp.maximum(jnp.maximum(pos + 1 - cfg.sliding_window, 0)
+                             - base, 0)
+    return dst_block, dst_off, lengths, starts
+
+
 def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
-                      pos, rng=None, *, temperature: float = 0.0,
+                      pos, rng=None, *, base=None, temperature: float = 0.0,
                       interpret: bool | None = None):
     """One decode step for B slots over the paged pool.
 
     token: (B,) int32 — last sampled token per slot (garbage for idle slots);
-    k_pages/v_pages: (L, K, P, page, D); block_tables: (B, pages_per_seq)
-    int32 physical block per logical page (idle slots point every entry at a
-    scratch block); pos: (B,) int32 — write position == current length.
+    k_pages/v_pages: (L, K, P, page, D); block_tables: (B, table_pages)
+    int32 physical block per resident logical page (idle slots point every
+    entry at a scratch block); pos: (B,) int32 — ABSOLUTE write position ==
+    current length (RoPE uses it unchanged); base: optional (B,) int32 —
+    absolute position of each slot's first resident page under sliding-
+    window recycling (None ≡ zeros: nothing recycled).
 
-    Each layer scatters the new KV into (block_tables[b, pos//page], pos%page)
-    and attends via the Pallas paged kernel with lengths = pos + 1. Sampling
-    stays on device: returns (next_token (B,), logits (B, V), k_pages,
-    v_pages) with a single host sync left to the caller.
+    Each layer scatters the new KV into
+    (block_tables[b, (pos-base)//page], pos%page) and attends via the Pallas
+    paged kernel over [max(0, pos+1-window), pos] — recycled pages are
+    simply absent from the table. Sampling stays on device: returns
+    (next_token (B,), logits (B, V), k_pages, v_pages) with a single host
+    sync left to the caller.
     """
-    b = token.shape[0]
     page = k_pages.shape[3]
-    rows = jnp.arange(b)
-    dst_block = block_tables[rows, pos // page]          # (B,) physical slots
-    dst_off = pos % page
-    lengths = pos + 1
+    dst_block, dst_off, lengths, starts = _window_addressing(
+        cfg, page, block_tables, pos, base)
     positions = pos[:, None]
     x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
 
@@ -189,7 +230,7 @@ def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
         x, kl, vl = _paged_attn_layer(cfg, p, x, kl, vl, block_tables,
                                       lengths, dst_block, dst_off, positions,
                                       norm_key="norm_attn",
-                                      interpret=interpret)
+                                      interpret=interpret, starts=starts)
         return x, (kl, vl)
 
     x, (k_pages, v_pages) = jax.lax.scan(
@@ -245,7 +286,7 @@ def prefill_hybrid_bucketed(cfg, params, tokens, true_len, *,
 
 def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
                              block_tables, blob_slots, pos, rng=None, *,
-                             temperature: float = 0.0,
+                             base=None, temperature: float = 0.0,
                              interpret: bool | None = None):
     """One hybrid decode step: paged attention for the local-attn layers
     (pool layer axis = attn layers in depth order), O(1) RG-LRU steps for
@@ -254,17 +295,17 @@ def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
     replica blob resumes byte-identically with no extra unpacking step.
 
     token: (B,) int32; k_pages/v_pages: (L_attn, K, P, page, D);
-    blobs: (n_blobs, state_blob_words) f32; block_tables: (B, pages_per_seq);
+    blobs: (n_blobs, state_blob_words) f32; block_tables: (B, table_pages);
     blob_slots: (B,) int32 physical blob slot per engine slot (idle slots
-    point at a scratch blob); pos: (B,) int32.
+    point at a scratch blob); pos: (B,) int32 absolute; base: optional (B,)
+    int32 first-resident-page position (sliding-window recycling — the
+    local-attention window IS cfg.sliding_window, so tables hold only the
+    resident ring once decode passes it).
     Returns (next_token, logits, k_pages, v_pages, blobs).
     """
-    b = token.shape[0]
     page = k_pages.shape[3]
-    rows = jnp.arange(b)
-    dst_block = block_tables[rows, pos // page]
-    dst_off = pos % page
-    lengths = pos + 1
+    dst_block, dst_off, lengths, starts = _window_addressing(
+        cfg, page, block_tables, pos, base)
     positions = pos[:, None]
     x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
     states = H.unpack_state_blob(cfg, blobs[blob_slots])
@@ -279,7 +320,7 @@ def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
             x, kl, vl = _paged_attn_layer(
                 cfg, p, x, k_pages[ai], v_pages[ai], block_tables, lengths,
                 dst_block, dst_off, positions, norm_key="norm_t",
-                interpret=interpret)
+                interpret=interpret, starts=starts)
             k_pages = k_pages.at[ai].set(kl)
             v_pages = v_pages.at[ai].set(vl)
             ai += 1

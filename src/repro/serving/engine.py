@@ -28,6 +28,15 @@ the per-layer MLP (MoE routes each decoded token drop-free — see
 local-attention layers and carries RG-LRU recurrent state as opaque
 fixed-size blobs in the pool's blob store — dirtied every decode step,
 delta-replicated next to the KV blocks, and promoted in place on failover.
+
+Sliding-window archs (mixtral, RecurrentGemma local attention) serve ANY
+``max_seq``: each request's block table is a ring over the resident window
+(``ceil(window/page) + 1`` pages); pages that fall fully out of the window
+are recycled back to the pool as decode advances
+(``PagedKVPool.recycle_out_of_window``) and their hosted replicas retired
+on the ring peer with a metadata-only retire message — so steady-state
+replication stays ≤ 1 KV block (+ 1 blob on hybrid) per request per step
+and ``promote_replica`` reconstructs exactly the live window.
 """
 from __future__ import annotations
 
@@ -46,14 +55,6 @@ from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
 
 SCRATCH_RID = -7  # pool rid reserved for the idle-slot scratch block
-
-
-def clamped_max_seq(cfg, max_seq: int) -> int:
-    """Largest servable context for ``cfg``: the paged path attends over the
-    full block table, so windowed archs cap at the sliding window until
-    block recycling lands (open ROADMAP item). Entry points use this to
-    build an EngineConfig that passes RealInstance's guard."""
-    return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
 
 
 @dataclasses.dataclass
@@ -76,12 +77,6 @@ class RealInstance:
                 f"paged serving covers {PD.PAGED_FAMILIES}, not "
                 f"{cfg.arch_type!r} (encoder-only / pure-recurrent families "
                 "are not engine targets)")
-        if cfg.sliding_window and ecfg.max_seq > cfg.sliding_window:
-            raise ValueError(
-                f"max_seq {ecfg.max_seq} exceeds sliding_window "
-                f"{cfg.sliding_window}: the paged path attends over the full "
-                "block table; serving beyond the window needs block "
-                "recycling (open ROADMAP item)")
         self.cfg = cfg
         self.family = cfg.arch_type
         self.params = params          # node-resident weights (shared ref!)
@@ -90,7 +85,11 @@ class RealInstance:
         self.alive = True
         B, S = ecfg.max_slots, ecfg.max_seq
         page = cfg.page_size
-        self.pages_per_seq = -(-S // page)
+        # sliding-window archs serve any max_seq: the block table holds only
+        # the resident ring (ceil(window/page)+1 pages); older pages are
+        # recycled as decode advances (paged_decode.table_pages)
+        self.window = cfg.sliding_window
+        self.pages_per_seq = PD.table_pages(cfg, S)
         n_blocks = ecfg.pool_blocks or (2 * B * self.pages_per_seq + 1)
         # hybrid: recurrent state blobs ride in the pool next to the KV
         # blocks (B primaries + B hosted replicas + 1 scratch)
@@ -99,13 +98,19 @@ class RealInstance:
             n_blocks, page, n_layers=len(PD.kv_layer_indices(cfg)),
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, real=True,
             dtype=PD.kv_dtype(cfg), blob_words=blob_words,
-            n_blobs=(2 * B + 1) if blob_words else 0)
+            n_blobs=(2 * B + 1) if blob_words else 0,
+            window=self.window)
         # idle batch slots write/attend into one scratch block, never freed
         self.scratch = self.pool.allocate(SCRATCH_RID, 1)[0].slot
         self.block_table = np.full((B, self.pages_per_seq), self.scratch,
                                    np.int32)
         self.slot_rid = [-1] * B      # request id per slot
         self.slot_pos = np.zeros(B, np.int32)
+        # absolute position of each slot's first resident page (recycling)
+        self.slot_base = np.zeros(B, np.int32)
+        # (rid, logical_idx) of pages recycled this step: the engine turns
+        # these into retire messages for the ring peer hosting the replica
+        self.pending_retires: List[tuple] = []
         self.scratch_blob = 0
         if blob_words:
             self.scratch_blob = self.pool.allocate_blob(SCRATCH_RID).slot
@@ -118,19 +123,21 @@ class RealInstance:
         self._rng = jax.random.PRNGKey(instance_id + 1)
 
         if self.family == "hybrid":
-            def _step(p, tok, k_pages, v_pages, blobs, bt, bslots, pos, rng):
+            def _step(p, tok, k_pages, v_pages, blobs, bt, bslots, pos, base,
+                      rng):
                 return PD.decode_step_paged_hybrid(
                     cfg, p, tok, k_pages, v_pages, blobs, bt, bslots, pos,
-                    rng, temperature=temp, interpret=interp)
+                    rng, base=base, temperature=temp, interpret=interp)
 
             # pool buffers are donated: decode updates pages/blobs in place
             self._decode = jax.jit(_step, donate_argnums=(2, 3, 4))
             self._prefill = jax.jit(
                 lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
         else:
-            def _step(p, tok, k_pages, v_pages, bt, pos, rng):
+            def _step(p, tok, k_pages, v_pages, bt, pos, base, rng):
                 return PD.decode_step_paged(cfg, p, tok, k_pages, v_pages, bt,
-                                            pos, rng, temperature=temp,
+                                            pos, rng, base=base,
+                                            temperature=temp,
                                             interpret=interp)
 
             # pool buffers are donated: decode updates pages in place
@@ -146,7 +153,7 @@ class RealInstance:
         """Allocate primary blocks (and, for hybrid, the state blob),
         evicting hosted replicas under pressure (the paper's rule: replicas
         are the first thing dropped)."""
-        need = self.pool.blocks_for_tokens(n_tokens)
+        need = self.pool.resident_blocks_for(n_tokens)
         if need > self.pool.n_free:
             self.pool.evict_replicas_for_pressure(need)
         refs = self.pool.allocate(rid, n_tokens)
@@ -181,12 +188,17 @@ class RealInstance:
         else:
             logits, k_seq, v_seq = self._prefill(
                 self.params, jnp.asarray(toks), jnp.int32(n))
+        # windowed archs: only the window-covering tail pages were allocated
+        # (refs[0].logical_idx > 0 for long prompts) — write just those
+        first_page = refs[0].logical_idx
+        span = first_page * self.pool.page_size
         self.pool.write_blocks([r.slot for r in refs],
-                               *PD.pack_pages(k_seq, v_seq, len(refs),
-                                              self.pool.page_size))
+                               *PD.pack_pages(k_seq[:, span:], v_seq[:, span:],
+                                              len(refs), self.pool.page_size))
         row = np.full(self.pages_per_seq, self.scratch, np.int32)
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
+        self.slot_base[slot] = span
         if self.ecfg.temperature > 0:
             self._rng, admit_rng = jax.random.split(self._rng)
         else:
@@ -214,6 +226,14 @@ class RealInstance:
         for i in active:
             rid = self.slot_rid[i]
             toks[i] = self.requests[rid].output_tokens[-1]
+            # sliding window: pages fully below the window of the position
+            # this step writes are recycled BEFORE allocating the new page
+            # (freed slots are the first candidates for reuse); their hosted
+            # replicas are retired on the ring peer by the engine
+            recycled = self.pool.recycle_out_of_window(rid) \
+                if self.window else []
+            self.pending_retires.extend(
+                (rid, r.logical_idx) for r in recycled)
             # account the KV row this step writes; may open a fresh block
             # (marks the receiving block dirty -> delta replication unit)
             try:
@@ -221,7 +241,16 @@ class RealInstance:
             except MemoryError:
                 self.pool.evict_replicas_for_pressure(1)
                 ref = self.pool.append_token(rid)
-            self.block_table[i, ref.logical_idx] = ref.slot
+            if self.window:
+                # window-relative row: column j = j-th resident page
+                table = self.pool.table(rid)
+                row = np.full(self.pages_per_seq, self.scratch, np.int32)
+                row[:len(table)] = [r.slot for r in table]
+                self.block_table[i] = row
+                self.slot_base[i] = \
+                    table[0].logical_idx * self.pool.page_size
+            else:
+                self.block_table[i, ref.logical_idx] = ref.slot
             # the recurrent state advances every step -> blob always dirty
             self.pool.mark_blob_dirty(rid)
         if self.ecfg.temperature > 0:
@@ -233,12 +262,12 @@ class RealInstance:
                 self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
                 self.pool.blobs, jnp.asarray(self.block_table),
                 jnp.asarray(self.slot_blob), jnp.asarray(self.slot_pos),
-                step_rng)
+                jnp.asarray(self.slot_base), step_rng)
         else:
             nxt, _, self.pool.k, self.pool.v = self._decode(
                 self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
                 jnp.asarray(self.block_table), jnp.asarray(self.slot_pos),
-                step_rng)
+                jnp.asarray(self.slot_base), step_rng)
         nxt = np.asarray(nxt)          # the step's single host sync
         finished = []
         for i in active:
@@ -260,6 +289,7 @@ class RealInstance:
             slot = self.slot_rid.index(rid)
             self.slot_rid[slot] = -1
             self.slot_pos[slot] = 0
+            self.slot_base[slot] = 0
             self.block_table[slot] = self.scratch
             self.slot_blob[slot] = self.scratch_blob
             self.pool.free(rid)
@@ -268,10 +298,18 @@ class RealInstance:
     def slot_of(self, rid: int) -> int:
         return self.slot_rid.index(rid)
 
+    def drain_retires(self) -> List[tuple]:
+        """(rid, logical_idx) pages recycled since the last drain."""
+        out, self.pending_retires = self.pending_retires, []
+        return out
+
     # -- failover --------------------------------------------------------------
     def adopt_replica(self, peer: int, req: Request, meta) -> bool:
         """Failover entry: promote hosted replica blocks to primary and
-        resume the request here — no buffer copy, just ownership flip."""
+        resume the request here — no buffer copy, just ownership flip. The
+        promoted table is the live WINDOW on sliding-window archs: it must
+        contiguously cover every page the next decode step can attend to
+        (replica pages keep their absolute logical indices)."""
         slots = self.free_slots()
         if not slots or not self.alive:
             return False
@@ -279,17 +317,30 @@ class RealInstance:
         total = meta["pos"]
         refs = self.pool.promote_replica(peer, req.rid)
         bref = self.pool.blob_ref(req.rid)
-        if len(refs) < self.pool.blocks_for_tokens(total) or \
-                (self.family == "hybrid" and bref is None):
+        for ref in refs:
+            ref.n_filled = max(0, min(page, total - ref.logical_idx * page))
+            ref.replicated = False     # re-replicate to OUR ring target
+        # the replica may carry one page the primary had already recycled
+        # (hosting lags the live window by the in-flight retire): drop it
+        self.pool.recycle_out_of_window(req.rid)
+        refs = self.pool.table(req.rid)
+        pages = [r.logical_idx for r in refs]
+        first_needed = max(0, total + 1 - self.window) // page \
+            if self.window else 0
+        complete = (
+            pages and pages[0] <= first_needed
+            and pages[-1] == (total - 1) // page
+            and pages == list(range(pages[0], pages[0] + len(pages)))
+            and len(refs) <= self.pages_per_seq
+            and all(r.n_filled > 0 for r in refs))
+        if not complete or (self.family == "hybrid" and bref is None):
             self.pool.free(req.rid)    # incomplete replica: can't resume
             return False
-        for i, ref in enumerate(refs):
-            ref.n_filled = max(0, min(page, total - i * page))
-            ref.replicated = False     # re-replicate to OUR ring target
         slot = slots[0]
         row = np.full(self.pages_per_seq, self.scratch, np.int32)
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
+        self.slot_base[slot] = refs[0].logical_idx * page
         if bref is not None:
             bref.replicated = False
             self.slot_blob[slot] = bref.slot
@@ -303,6 +354,7 @@ class RealInstance:
 
     def fail(self):
         self.alive = False
+        self.pending_retires.clear()   # a dead primary sends no retires
 
 
 class RealEngine:
@@ -329,6 +381,9 @@ class RealEngine:
         self.repl_bytes_total = 0
         self.repl_steps = 0
         self.active_request_steps = 0
+        # sliding-window recycling: retire messages sent to replica hosts
+        # (metadata-only — a retire carries no KV payload)
+        self.retire_msgs_total = 0
 
     def submit(self, req: Request):
         self.waiting.append(req)
@@ -361,7 +416,18 @@ class RealEngine:
                 break
         for inst in alive:
             self.active_request_steps += len(inst.requests)
-            for req in inst.step(self.t):
+            finished = inst.step(self.t)
+            # retire hosted replicas of pages the primary recycled this
+            # step — BEFORE the delta pass, so replica tables mirror the
+            # live window when new blocks are hosted against them
+            for rid, lidx in inst.drain_retires():
+                meta = self.replica_meta.get(rid)
+                if meta is None or not self.instances[meta["home"]].alive:
+                    continue
+                if self.instances[meta["home"]].pool.retire_replica_block(
+                        meta["peer"], rid, lidx):
+                    self.retire_msgs_total += 1
+            for req in finished:
                 self._drop_replica_of(req.rid)
                 self.done.append(req)
         if self.ecfg.replicate:
@@ -394,9 +460,18 @@ class RealEngine:
             for rid, req in inst.requests.items():
                 table = inst.pool.table(rid)
                 rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                # retires keep the hosted table in lockstep with the live
+                # window; if it ever drifts (e.g. the ring target changed
+                # after a failure), drop it and re-host the current window
+                if any(a.logical_idx != b.logical_idx
+                       for a, b in zip(table, rtab)):
+                    tgt.pool.drop_replica(inst.instance_id, rid)
+                    rtab = []
                 need = len(table) - len(rtab)
                 if need > 0:
-                    if not tgt.pool.host_replica(inst.instance_id, rid, need):
+                    first_logical = table[len(rtab)].logical_idx
+                    if not tgt.pool.host_replica(inst.instance_id, rid, need,
+                                                 first_logical=first_logical):
                         continue       # no headroom on target; retry next pass
                     rtab = tgt.pool.replica_table(inst.instance_id, rid)
                 bref = inst.pool.blob_ref(rid)
@@ -449,6 +524,9 @@ class RealEngine:
                 self.repl_blocks_total / max(self.active_request_steps, 1),
             "blobs_per_request_step":
                 self.repl_blobs_total / max(self.active_request_steps, 1),
+            "retire_msgs_total": self.retire_msgs_total,
+            "retires_per_request_step":
+                self.retire_msgs_total / max(self.active_request_steps, 1),
         }
 
     def fail_instance(self, instance_id: int) -> List[int]:

@@ -49,10 +49,17 @@ class PagedKVPool:
 
     def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
                  n_kv_heads: int = 0, head_dim: int = 0, real: bool = False,
-                 dtype="bfloat16", blob_words: int = 0, n_blobs: int = 0):
+                 dtype="bfloat16", blob_words: int = 0, n_blobs: int = 0,
+                 window: int = 0):
         self.n_blocks = n_blocks
         self.page_size = page_size
         self.real = real
+        # sliding-window ring view: when window > 0, each request keeps only
+        # the blocks that can still fall inside the attention window; blocks
+        # fully below it are recycled (``recycle_out_of_window``). BlockRef
+        # .logical_idx is the ABSOLUTE logical page index in both modes, so
+        # a table is always a contiguous ascending run of pages.
+        self.window = window
         self._free: List[int] = list(range(n_blocks))
         self._tables: Dict[int, List[BlockRef]] = {}      # rid -> blocks
         # replica blocks hosted on behalf of peers: (peer_node, rid) -> slots
@@ -107,19 +114,53 @@ class PagedKVPool:
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    @property
+    def window_pages(self) -> int:
+        """Max resident pages per request under the ring view: the window
+        can straddle a page boundary, hence ceil(window/page) + 1. 0 when
+        the pool is unwindowed."""
+        if not self.window:
+            return 0
+        return -(-self.window // self.page_size) + 1
+
+    def resident_blocks_for(self, n_tokens: int) -> int:
+        """Blocks a fresh n_tokens-long request occupies: all of them on an
+        unwindowed pool, only the window-covering tail pages on a windowed
+        one."""
+        if n_tokens <= 0:
+            return 0
+        if not self.window:
+            return self.blocks_for_tokens(n_tokens)
+        first = max(0, n_tokens - self.window) // self.page_size
+        return (n_tokens - 1) // self.page_size - first + 1
+
     def can_allocate(self, n_tokens: int) -> bool:
-        return self.n_free >= self.blocks_for_tokens(n_tokens)
+        return self.n_free >= self.resident_blocks_for(n_tokens)
 
     def allocate(self, rid: int, n_tokens: int) -> List[BlockRef]:
-        """Allocate blocks for n_tokens; raises MemoryError if full
-        (caller should evict replicas first — the paper's pressure rule)."""
-        need = self.blocks_for_tokens(n_tokens)
+        """Allocate blocks; raises MemoryError if full (caller should evict
+        replicas first — the paper's pressure rule).
+
+        Fresh rid: blocks for an n_tokens-long prompt. On a windowed pool
+        only the pages intersecting the attention window of the next write
+        position are resident — logical indices start at the window's first
+        page, not 0 (the recycled prefix is never materialized).
+        Existing rid: appends blocks for n_tokens MORE tokens.
+        """
+        table = self._tables.get(rid)
+        if table:
+            start = table[-1].logical_idx + 1
+            need = self.blocks_for_tokens(n_tokens)
+            remaining = n_tokens
+        else:
+            start = (max(0, n_tokens - self.window) // self.page_size
+                     if self.window else 0)
+            need = self.resident_blocks_for(n_tokens)
+            remaining = n_tokens - start * self.page_size
         if need > self.n_free:
             raise MemoryError(f"pool exhausted: need {need}, free {self.n_free}")
         table = self._tables.setdefault(rid, [])
-        start = len(table)
         refs = []
-        remaining = n_tokens
         for i in range(need):
             slot = self._free.pop()
             ref = BlockRef(rid, start + i, slot,
@@ -145,7 +186,32 @@ class PagedKVPool:
         return self._tables.get(rid, [])
 
     def n_tokens(self, rid: int) -> int:
+        """Resident tokens (== total tokens on an unwindowed pool)."""
         return sum(ref.n_filled for ref in self.table(rid))
+
+    def abs_tokens(self, rid: int) -> int:
+        """Absolute sequence length, including recycled (non-resident)
+        prefix tokens: the last page's absolute span end."""
+        table = self._tables.get(rid)
+        if not table:
+            return 0
+        return table[-1].logical_idx * self.page_size + table[-1].n_filled
+
+    def recycle_out_of_window(self, rid: int) -> List[BlockRef]:
+        """Free head blocks that fall fully below the attention window of
+        the NEXT write position (pos == abs_tokens). Returns the recycled
+        refs so the engine can retire their hosted replicas on the ring
+        peer. No-op on unwindowed pools."""
+        table = self._tables.get(rid)
+        if not self.window or not table:
+            return []
+        min_pos = max(0, self.abs_tokens(rid) + 1 - self.window)
+        recycled = []
+        while table and (table[0].logical_idx + 1) * self.page_size <= min_pos:
+            ref = table.pop(0)
+            self._free.append(ref.slot)
+            recycled.append(ref)
+        return recycled
 
     def free(self, rid: int):
         for ref in self._tables.pop(rid, []):
@@ -194,22 +260,44 @@ class PagedKVPool:
         return len(self._blob_replicas)
 
     # -- replica hosting -------------------------------------------------------
-    def host_replica(self, peer: int, rid: int, n_blocks: int) -> bool:
+    def host_replica(self, peer: int, rid: int, n_blocks: int,
+                     first_logical: Optional[int] = None) -> bool:
         """Reserve blocks for a peer's replicated request. Never raises:
         returns False if there is no headroom (peer will retry / drop).
         Grows an existing replica table incrementally (delta replication
-        hosts one block at a time as the primary request grows)."""
+        hosts one block at a time as the primary request grows).
+        ``first_logical`` pins the absolute logical page index of the first
+        new block (sliding-window primaries start past page 0); default
+        continues the existing run (0 for a fresh table)."""
         if n_blocks > self.n_free:
             return False
         table = self._replica_tables.setdefault((peer, rid), [])
-        base = len(table)
+        if first_logical is None:
+            first_logical = table[-1].logical_idx + 1 if table else 0
         for i in range(n_blocks):
             slot = self._free.pop()
-            table.append(BlockRef(rid, base + i, slot, n_filled=self.page_size))
+            table.append(BlockRef(rid, first_logical + i, slot,
+                                  n_filled=self.page_size))
         return True
 
     def replica_table(self, peer: int, rid: int) -> List[BlockRef]:
         return self._replica_tables.get((peer, rid), [])
+
+    def retire_replica_block(self, peer: int, rid: int,
+                             logical_idx: int) -> bool:
+        """The peer recycled primary page ``logical_idx`` out of its window:
+        drop the hosted counterpart so the replica mirrors the live window.
+        Tolerant no-op (False) when the block is not hosted — the replica
+        may have been pressure-evicted or never hosted."""
+        table = self._replica_tables.get((peer, rid))
+        if not table:
+            return False
+        for i, ref in enumerate(table):
+            if ref.logical_idx == logical_idx:
+                table.pop(i)
+                self._free.append(ref.slot)
+                return True
+        return False
 
     def drop_replica(self, peer: int, rid: int):
         for ref in self._replica_tables.pop((peer, rid), []):
@@ -249,12 +337,12 @@ class PagedKVPool:
 
     def promote_replica(self, peer: int, rid: int) -> List[BlockRef]:
         """Failure path: the replicated request resumes *here* — the hosted
-        replica blocks become this pool's primary blocks for rid. A hosted
-        state blob (hybrid family) is promoted alongside the KV blocks."""
+        replica blocks become this pool's primary blocks for rid, keeping
+        their absolute logical page indices (a windowed replica starts past
+        page 0). A hosted state blob (hybrid family) is promoted alongside
+        the KV blocks."""
         refs = self._replica_tables.pop((peer, rid), [])
         assert rid not in self._tables, "rid already live on this node"
-        for i, ref in enumerate(refs):
-            ref.logical_idx = i
         self._tables[rid] = refs
         blob = self._blob_replicas.pop((peer, rid), None)
         if blob is not None:

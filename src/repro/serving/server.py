@@ -14,7 +14,7 @@ import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-from repro.serving.engine import EngineConfig, RealEngine, clamped_max_seq
+from repro.serving.engine import EngineConfig, RealEngine
 from repro.serving.request import Request, RequestState
 
 
@@ -163,11 +163,9 @@ def main():
     if cfg.n_params() > 3e8:
         print(f"{args.arch}: serving the reduced variant on CPU")
         cfg = cfg.reduced()
+    # sliding-window archs serve any max_seq (block recycling keeps only
+    # the attention window resident) — no capping needed
     ecfg = EngineConfig()
-    capped = clamped_max_seq(cfg, ecfg.max_seq)
-    if capped != ecfg.max_seq:
-        print(f"{args.arch}: capping max_seq at the sliding window ({capped})")
-        ecfg = EngineConfig(max_seq=capped)
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "
           f"({args.instances} instances). POST /v1/completions")

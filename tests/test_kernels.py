@@ -1,12 +1,16 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis, all vs the
-pure-jnp oracles in kernels/ref.py (interpret=True on CPU)."""
+pure-jnp oracles in kernels/ref.py (interpret=True on CPU). Only the
+hypothesis sweep needs hypothesis; everything else runs everywhere."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.ops import paged_attention, ssd_scan
 from repro.kernels.ref import paged_attention_ref, ssd_scan_ref
@@ -45,17 +49,34 @@ def test_paged_attention_sweep(b, h, kheads, d, page, pps, dtype):
                                rtol=tol, atol=tol)
 
 
-@settings(max_examples=12, deadline=None)
-@given(b=st.integers(1, 4), rep=st.sampled_from([1, 2, 4]),
-       kheads=st.sampled_from([1, 2, 4]), page=st.sampled_from([8, 16]),
-       pps=st.integers(1, 4), seed=st.integers(0, 10_000))
-def test_paged_attention_hypothesis(b, rep, kheads, page, pps, seed):
-    q, kp, vp, bt, ln = _paged_case(b, rep * kheads, kheads, 64, page, pps,
-                                    jnp.float32, seed)
-    out = paged_attention(q, kp, vp, bt, ln, interpret=True)
-    ref = paged_attention_ref(q, kp, vp, bt, ln)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=2e-5, atol=2e-5)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 4), rep=st.sampled_from([1, 2, 4]),
+           kheads=st.sampled_from([1, 2, 4]), page=st.sampled_from([8, 16]),
+           pps=st.integers(1, 4), seed=st.integers(0, 10_000))
+    def test_paged_attention_hypothesis(b, rep, kheads, page, pps, seed):
+        q, kp, vp, bt, ln = _paged_case(b, rep * kheads, kheads, 64, page,
+                                        pps, jnp.float32, seed)
+        out = paged_attention(q, kp, vp, bt, ln, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, bt, ln)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 4), rep=st.sampled_from([1, 2]),
+           kheads=st.sampled_from([1, 2]), page=st.sampled_from([8, 16]),
+           pps=st.integers(1, 4), seed=st.integers(0, 10_000))
+    def test_paged_attention_starts_hypothesis(b, rep, kheads, page, pps,
+                                               seed):
+        """Random window starts (0 <= start < length) vs the oracle."""
+        rng = np.random.default_rng(seed)
+        q, kp, vp, bt, ln = _paged_case(b, rep * kheads, kheads, 64, page,
+                                        pps, jnp.float32, seed)
+        st_ = jnp.asarray(rng.integers(0, np.asarray(ln)), jnp.int32)
+        out = paged_attention(q, kp, vp, bt, ln, st_, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, bt, ln, st_)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_paged_attention_length_masking():
@@ -69,6 +90,38 @@ def test_paged_attention_length_masking():
     out2 = paged_attention(q, kp2, vp2, bt, ln, interpret=True)
     np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]),
                                rtol=1e-6, atol=1e-6)
+
+
+def test_paged_attention_start_masking():
+    """Sliding-window lower bound: tokens below `starts` must not influence
+    the output — even when poisoned, and even when a whole leading page
+    falls below the window (the fully-masked-page softmax corner)."""
+    q, kp, vp, bt, ln = _paged_case(2, 4, 2, 64, 16, 3, jnp.float32)
+    ln = jnp.asarray([40, 44], jnp.int32)
+    st_ = jnp.asarray([18, 21], jnp.int32)     # page 0 fully below the window
+    out1 = paged_attention(q, kp, vp, bt, ln, st_, interpret=True)
+    # poison every token below each window start, incl. all of page 0
+    kp2, vp2 = kp, vp
+    for i, s in enumerate([18, 21]):
+        for t in range(s):
+            kp2 = kp2.at[:, bt[i, t // 16], t % 16].set(1e4)
+            vp2 = vp2.at[:, bt[i, t // 16], t % 16].set(1e4)
+    out2 = paged_attention(q, kp2, vp2, bt, ln, st_, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+    # and the result equals the oracle restricted to [start, length)
+    ref = paged_attention_ref(q, kp, vp, bt, ln, st_)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_starts_none_is_zero():
+    """Omitting starts must equal passing explicit zeros."""
+    q, kp, vp, bt, ln = _paged_case(2, 4, 2, 64, 16, 3, jnp.float32)
+    out1 = paged_attention(q, kp, vp, bt, ln, interpret=True)
+    out2 = paged_attention(q, kp, vp, bt, ln,
+                           jnp.zeros_like(ln), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
 # --------------------------------------------------------------------------
@@ -98,17 +151,20 @@ def test_ssd_scan_sweep(b, s, h, p, n, chunk):
     np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(b=st.integers(1, 2), nchunks=st.integers(1, 4),
-       chunk=st.sampled_from([8, 16]), h=st.integers(1, 3),
-       seed=st.integers(0, 10_000))
-def test_ssd_scan_hypothesis(b, nchunks, chunk, h, seed):
-    s = nchunks * chunk
-    xdt, a, B, C = _ssd_case(b, s, h, 8, 16, seed)
-    y, hf = ssd_scan(xdt, a, B, C, chunk=chunk, interpret=True)
-    yr, hr = ssd_scan_ref(xdt, a, B, C)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)
-    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=3e-4, atol=3e-4)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 2), nchunks=st.integers(1, 4),
+           chunk=st.sampled_from([8, 16]), h=st.integers(1, 3),
+           seed=st.integers(0, 10_000))
+    def test_ssd_scan_hypothesis(b, nchunks, chunk, h, seed):
+        s = nchunks * chunk
+        xdt, a, B, C = _ssd_case(b, s, h, 8, 16, seed)
+        y, hf = ssd_scan(xdt, a, B, C, chunk=chunk, interpret=True)
+        yr, hr = ssd_scan_ref(xdt, a, B, C)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                                   rtol=3e-4, atol=3e-4)
 
 
 def test_ssd_scan_matches_model_impl():

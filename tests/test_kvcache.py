@@ -1,12 +1,33 @@
-"""Paged KV pool invariants (unit + hypothesis property tests). The unit
-tests run everywhere; the stateful property machine needs hypothesis."""
+"""Paged KV pool invariants (unit + property tests).
+
+The property layer drives random allocate / append / recycle / free /
+host_replica / retire / evict / promote / replicate sequences against a
+sliding-window pool (with a blob store) and asserts the pool-wide
+invariants the serving engine depends on:
+
+  * no block leaks:  primary + replica + free == n_blocks, always;
+  * no double-free:  the free list never holds a slot twice, and no slot is
+    simultaneously used and free (so replica tables can never reference a
+    recycled slot);
+  * dirty-flag monotonicity: ``BlockRef.replicated`` becomes True ONLY via
+    the replicate action — allocation, appends, recycling, and promotion
+    never launder an unreplicated block into a replicated one;
+  * table shape: every primary table is a contiguous ascending run of
+    absolute logical pages with sane fill counts.
+
+The action/invariant logic lives in ``PoolActions`` and is driven two ways:
+a numpy-RNG sweep that runs everywhere (tier-1), and a hypothesis stateful
+machine (gated by the usual ``importorskip`` pattern) whose shrinking makes
+CI failures minimal.
+"""
+import numpy as np
 import pytest
 
 try:
     from hypothesis import settings, strategies as st
     from hypothesis.stateful import (RuleBasedStateMachine, invariant, rule)
     HAVE_HYPOTHESIS = True
-except ImportError:                     # unit tests still run without it
+except ImportError:                     # the numpy sweep still runs
     HAVE_HYPOTHESIS = False
 
 from repro.serving.kvcache import PagedKVPool
@@ -16,9 +37,10 @@ from repro.serving.kvcache import PagedKVPool
 def test_pool_machine_needs_hypothesis():
     """Visible skip marker: when hypothesis is missing, the PoolMachine
     property suite below is not generated at all — this placeholder makes
-    the gap show up in the pytest summary instead of vanishing silently."""
+    the gap show up in the pytest summary instead of vanishing silently
+    (the numpy-driven sweep still covers the same action set)."""
     pytest.skip("hypothesis not installed: PoolMachine property tests "
-                "did not run")
+                "did not run (see test_pool_random_action_sequences)")
 
 
 def test_alloc_free_roundtrip():
@@ -65,6 +87,88 @@ def test_host_replica_rejects_without_headroom():
     pool = PagedKVPool(n_blocks=4, page_size=16)
     pool.allocate(1, 60)
     assert not pool.host_replica(2, 9, 2)     # replicas never raise
+
+
+def test_failed_allocate_leaves_no_zombie_table():
+    pool = PagedKVPool(n_blocks=2, page_size=8)
+    with pytest.raises(MemoryError):
+        pool.allocate(5, 100)
+    assert 5 not in pool.live_requests()
+    assert pool.n_free == 2
+
+
+# -- sliding-window ring view (block recycling) ------------------------------
+
+def test_windowed_allocate_starts_at_window_page():
+    """A fresh long prompt only materializes the pages intersecting the
+    attention window — logical indices are ABSOLUTE, starting past 0."""
+    pool = PagedKVPool(n_blocks=32, page_size=8, window=16)
+    refs = pool.allocate(1, 40)                # window covers [24, 40)
+    assert [r.logical_idx for r in refs] == [3, 4]
+    assert pool.abs_tokens(1) == 40            # absolute length preserved
+    assert pool.n_tokens(1) == 16              # resident tokens only
+    assert pool.window_pages == 3              # ceil(16/8) + 1
+    pool.free(1)
+    assert pool.n_free == 32
+
+
+def test_windowed_short_prompt_allocates_from_zero():
+    pool = PagedKVPool(n_blocks=32, page_size=8, window=16)
+    refs = pool.allocate(1, 10)
+    assert [r.logical_idx for r in refs] == [0, 1]
+    assert pool.abs_tokens(1) == 10
+
+
+def test_recycle_out_of_window_bounds_residency():
+    """Decode far past the window: recycling before each append keeps the
+    resident table within ceil(window/page)+1 blocks and returns the
+    recycled refs (the engine's retire messages)."""
+    pool = PagedKVPool(n_blocks=16, page_size=8, window=16)
+    pool.allocate(1, 10)
+    retired = []
+    for _ in range(100):
+        retired += [r.logical_idx for r in pool.recycle_out_of_window(1)]
+        pool.append_token(1)
+        assert len(pool.table(1)) <= pool.window_pages
+    assert pool.abs_tokens(1) == 110
+    # recycled pages are exactly the dropped prefix, in order
+    table_pages = [r.logical_idx for r in pool.table(1)]
+    assert retired == list(range(table_pages[0]))
+    # every resident page still covers part of the window of the next write
+    assert (table_pages[0] + 1) * 8 > 110 + 1 - 16
+    pool.free(1)
+    assert pool.n_free == 16
+
+
+def test_recycle_noop_inside_window():
+    pool = PagedKVPool(n_blocks=16, page_size=8, window=64)
+    pool.allocate(1, 30)
+    assert pool.recycle_out_of_window(1) == []
+    assert pool.n_tokens(1) == 30
+
+
+def test_retire_replica_block():
+    """The ring peer drops a hosted page when the primary recycles it —
+    tolerant of pages it never hosted (eviction races)."""
+    pool = PagedKVPool(n_blocks=16, page_size=8, window=16)
+    assert pool.host_replica(0, 5, 3, first_logical=4)
+    assert [r.logical_idx for r in pool.replica_table(0, 5)] == [4, 5, 6]
+    free_before = pool.n_free
+    assert pool.retire_replica_block(0, 5, 4)
+    assert pool.n_free == free_before + 1
+    assert [r.logical_idx for r in pool.replica_table(0, 5)] == [5, 6]
+    assert not pool.retire_replica_block(0, 5, 4)      # already gone
+    assert not pool.retire_replica_block(0, 99, 0)     # never hosted
+
+
+def test_windowed_promote_keeps_absolute_pages():
+    """Promotion preserves absolute logical indices so the adopted request
+    resumes with the correct window base."""
+    pool = PagedKVPool(n_blocks=16, page_size=8, window=16)
+    pool.host_replica(0, 5, 3, first_logical=7)
+    refs = pool.promote_replica(0, 5)
+    assert [r.logical_idx for r in refs] == [7, 8, 9]
+    assert pool.table(5) == refs
 
 
 # -- blob blocks (opaque per-request state, hybrid RG-LRU) -------------------
@@ -122,62 +226,265 @@ def test_blob_pressure_eviction():
     assert pool.host_blob_replica(2, 12)
 
 
+# -- property layer ----------------------------------------------------------
+
+class PoolActions:
+    """Shared action set + invariants for the property tests. Each action
+    takes small-int parameters so it can be driven by hypothesis strategies
+    or a plain numpy RNG identically."""
+
+    N_BLOCKS, PAGE, WINDOW, N_BLOBS = 24, 4, 12, 6
+    ACTIONS = ("allocate", "append", "recycle", "free_one", "host_replica",
+               "retire", "promote", "evict", "evict_blobs", "replicate_pass")
+
+    def __init__(self):
+        self.pool = PagedKVPool(n_blocks=self.N_BLOCKS, page_size=self.PAGE,
+                                window=self.WINDOW, blob_words=2,
+                                n_blobs=self.N_BLOBS)
+        self.live = set()           # primary rids
+        self.rid = 0
+        self.peer_rid = 1000        # synthetic peer requests we host
+        # ids of refs blessed by the replicate action (dirty monotonicity)
+        self.blessed = set()
+        self._all_refs = []         # keep ids stable (no gc reuse)
+
+    # -- helpers -------------------------------------------------------------
+    def _track(self, refs):
+        self._all_refs.extend(refs)
+
+    def _pick_live(self, idx):
+        rids = sorted(self.live)
+        return rids[idx % len(rids)] if rids else None
+
+    def _hosted_keys(self):
+        return sorted(k for k, t in self.pool._replica_tables.items() if t)
+
+    # -- actions -------------------------------------------------------------
+    def allocate(self, tokens=1, **_):
+        self.rid += 1
+        try:
+            self._track(self.pool.allocate(self.rid, tokens))
+            self.live.add(self.rid)
+        except MemoryError:
+            pass
+
+    def append(self, idx=0, **_):
+        rid = self._pick_live(idx)
+        if rid is None:
+            return
+        # engine order: recycle the window first, then append
+        self._track(self.pool.recycle_out_of_window(rid))
+        try:
+            ref = self.pool.append_token(rid)
+            self._track([ref])
+            self.blessed.discard(id(ref))      # append dirties the block
+        except MemoryError:
+            pass
+
+    def recycle(self, idx=0, **_):
+        rid = self._pick_live(idx)
+        if rid is not None:
+            self._track(self.pool.recycle_out_of_window(rid))
+
+    def free_one(self, idx=0, **_):
+        rid = self._pick_live(idx)
+        if rid is not None:
+            self.pool.free(rid)
+            self.live.discard(rid)
+
+    def host_replica(self, n=1, first=0, fresh=True, **_):
+        rid = self.peer_rid + 1 if fresh else self.peer_rid
+        if self.pool.host_replica(99, rid, n,
+                                  first_logical=first if fresh else None):
+            self.peer_rid = rid
+            self._track(self.pool.replica_table(99, rid)[-n:])
+            self.pool.host_blob_replica(99, rid)
+
+    def retire(self, idx=0, lidx=0, **_):
+        keys = self._hosted_keys()
+        if keys:
+            peer, rid = keys[idx % len(keys)]
+            self.pool.retire_replica_block(peer, rid, lidx)
+
+    def promote(self, idx=0, **_):
+        keys = self._hosted_keys()
+        if not keys:
+            return
+        peer, rid = keys[idx % len(keys)]
+        if rid in self.pool._tables:
+            return                              # already primary here
+        self.pool.promote_replica(peer, rid)
+        self.live.add(rid)
+
+    def evict(self, **_):
+        self.pool.evict_replicas_for_pressure(self.pool.n_blocks)
+
+    def evict_blobs(self, **_):
+        self.pool.evict_blob_replicas_for_pressure()
+
+    def replicate_pass(self, **_):
+        """The ONLY action allowed to set replicated=True (models the
+        engine's delta pass, primaries and hosted blocks alike)."""
+        tables = list(self.pool._tables.values()) + \
+            list(self.pool._replica_tables.values())
+        for table in tables:
+            for ref in table:
+                ref.replicated = True
+                self.blessed.add(id(ref))
+        for ref in list(self.pool._blob_refs.values()) + \
+                list(self.pool._blob_replicas.values()):
+            ref.replicated = True
+            self.blessed.add(id(ref))
+
+    # -- invariants ----------------------------------------------------------
+    def check_no_slot_leak_or_double_book(self):
+        pool = self.pool
+        used = []
+        for rid in pool.live_requests():
+            used.extend(ref.slot for ref in pool.table(rid))
+        for key in list(pool._replica_tables):
+            used.extend(ref.slot for ref in pool._replica_tables[key])
+        assert len(used) == len(set(used)), "slot double-booked"
+        assert set(used).isdisjoint(pool._free), "slot both used and free"
+        assert len(pool._free) == len(set(pool._free)), "double-free"
+        assert len(used) + pool.n_free == pool.n_blocks, "slot leaked"
+
+    def check_no_blob_leak_or_double_book(self):
+        pool = self.pool
+        used = [r.slot for r in pool._blob_refs.values()]
+        used += [r.slot for r in pool._blob_replicas.values()]
+        assert len(used) == len(set(used)), "blob slot double-booked"
+        assert set(used).isdisjoint(pool._blob_free), \
+            "blob slot both used and free"
+        assert len(pool._blob_free) == len(set(pool._blob_free)), \
+            "blob double-free"
+        assert len(used) + len(pool._blob_free) == pool.n_blobs, \
+            "blob slot leaked"
+
+    def check_dirty_flags_are_monotone(self):
+        """replicated=True must have come from the replicate action."""
+        pool = self.pool
+        refs = [r for t in pool._tables.values() for r in t]
+        refs += [r for t in pool._replica_tables.values() for r in t]
+        refs += list(pool._blob_refs.values())
+        refs += list(pool._blob_replicas.values())
+        for ref in refs:
+            if ref.replicated:
+                assert id(ref) in self.blessed, (
+                    "block marked replicated without a replicate pass")
+
+    def check_primary_tables_contiguous(self):
+        pool = self.pool
+        for rid in pool.live_requests():
+            table = pool.table(rid)
+            pages = [r.logical_idx for r in table]
+            assert pages == sorted(pages)
+            if pages and rid <= self.rid:       # allocated here: contiguous
+                assert pages == list(range(pages[0], pages[0] + len(pages)))
+            for r in table:
+                assert 0 < r.n_filled <= pool.page_size
+
+    def check_all(self):
+        self.check_no_slot_leak_or_double_book()
+        self.check_no_blob_leak_or_double_book()
+        self.check_dirty_flags_are_monotone()
+        self.check_primary_tables_contiguous()
+
+
+def _random_args(rng):
+    return {"tokens": int(rng.integers(1, 31)), "idx": int(rng.integers(8)),
+            "n": int(rng.integers(1, 5)), "first": int(rng.integers(10)),
+            "fresh": bool(rng.integers(2)), "lidx": int(rng.integers(13))}
+
+
+def _run_random_sequences(n_sequences, steps, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_sequences):
+        m = PoolActions()
+        for _ in range(steps):
+            action = PoolActions.ACTIONS[rng.integers(len(PoolActions.ACTIONS))]
+            getattr(m, action)(**_random_args(rng))
+            m.check_all()
+
+
+def test_pool_random_action_sequences():
+    """Tier-1 property sweep (no hypothesis needed): >= 200 random action
+    sequences, invariants checked after every action."""
+    _run_random_sequences(n_sequences=200, steps=30, seed=0)
+
+
+@pytest.mark.slow
+def test_pool_random_action_sequences_deep():
+    _run_random_sequences(n_sequences=500, steps=100, seed=1)
+
+
 if HAVE_HYPOTHESIS:
     class PoolMachine(RuleBasedStateMachine):
-        """Property: the free list and tables always partition the pool."""
+        """Hypothesis front-end over PoolActions: same rules, same
+        invariants, plus shrinking to a minimal failing sequence."""
 
         def __init__(self):
             super().__init__()
-            self.pool = PagedKVPool(n_blocks=24, page_size=4)
-            self.live = set()
-            self.rid = 0
+            self.m = PoolActions()
 
         @rule(tokens=st.integers(1, 30))
         def allocate(self, tokens):
-            self.rid += 1
-            try:
-                self.pool.allocate(self.rid, tokens)
-                self.live.add(self.rid)
-            except MemoryError:
-                pass
+            self.m.allocate(tokens=tokens)
 
-        @rule()
-        def append(self):
-            for rid in sorted(self.live):
-                try:
-                    self.pool.append_token(rid)
-                except MemoryError:
-                    pass
-                break
+        @rule(idx=st.integers(0, 7))
+        def append(self, idx):
+            self.m.append(idx=idx)
 
-        @rule()
-        def free_one(self):
-            if self.live:
-                rid = sorted(self.live)[0]
-                self.pool.free(rid)
-                self.live.discard(rid)
+        @rule(idx=st.integers(0, 7))
+        def recycle(self, idx):
+            self.m.recycle(idx=idx)
 
-        @rule(n=st.integers(1, 4))
-        def replica(self, n):
-            self.pool.host_replica(99, self.rid + 1000, n)
+        @rule(idx=st.integers(0, 7))
+        def free_one(self, idx):
+            self.m.free_one(idx=idx)
+
+        @rule(n=st.integers(1, 4), first=st.integers(0, 9),
+              fresh=st.booleans())
+        def host_replica(self, n, first, fresh):
+            self.m.host_replica(n=n, first=first, fresh=fresh)
+
+        @rule(idx=st.integers(0, 7), lidx=st.integers(0, 12))
+        def retire(self, idx, lidx):
+            self.m.retire(idx=idx, lidx=lidx)
+
+        @rule(idx=st.integers(0, 7))
+        def promote(self, idx):
+            self.m.promote(idx=idx)
 
         @rule()
         def evict(self):
-            self.pool.evict_replicas_for_pressure(self.pool.n_blocks)
+            self.m.evict()
+
+        @rule()
+        def evict_blobs(self):
+            self.m.evict_blobs()
+
+        @rule()
+        def replicate_pass(self):
+            self.m.replicate_pass()
 
         @invariant()
-        def no_slot_leak_or_double_book(self):
-            pool = self.pool
-            used = []
-            for rid in pool.live_requests():
-                used.extend(ref.slot for ref in pool.table(rid))
-            for key in list(pool._replica_tables):
-                used.extend(ref.slot for ref in pool._replica_tables[key])
-            assert len(used) == len(set(used)), "slot double-booked"
-            assert set(used).isdisjoint(pool._free), "slot both used and free"
-            assert len(used) + pool.n_free == pool.n_blocks, "slot leaked"
+        def pool_invariants(self):
+            self.m.check_all()
 
 
+    # >= 200 random action sequences (the acceptance bar)
     TestPoolMachine = PoolMachine.TestCase
-    TestPoolMachine.settings = settings(max_examples=30, stateful_step_count=40,
+    TestPoolMachine.settings = settings(max_examples=200,
+                                        stateful_step_count=30,
                                         deadline=None)
+
+    class _DeepPoolMachine(PoolMachine):
+        pass
+
+    # deep sweep: long chains, non-blocking CI job (pytest -m slow --runslow)
+    TestPoolMachineDeep = _DeepPoolMachine.TestCase
+    TestPoolMachineDeep.settings = settings(max_examples=500,
+                                            stateful_step_count=80,
+                                            deadline=None)
+    TestPoolMachineDeep.pytestmark = [pytest.mark.slow]

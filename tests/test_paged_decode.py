@@ -166,6 +166,106 @@ def test_paged_engine_matches_hybrid_reference_byte_identical():
         assert got == ref, f"request {i}: paged hybrid != recurrent reference"
 
 
+# -- sliding-window recycling equivalence ------------------------------------
+#
+# The recycled-window paged path must match a reference that masks to the
+# SAME sliding window, per family, PAST the old max_seq == sliding_window
+# boundary. References are the model-level ring-buffer decode paths
+# (capacity == window); their prefill/ring arithmetic is only consistent
+# for prompts shorter than the window, so prompts stay < window and the
+# WINDOW CROSSING happens in decode — exactly the recycling regime. A
+# separate test covers prompts longer than the window against a full
+# recompute.
+
+def _dense_windowed_greedy(cfg, params, prompt, n_new):
+    """Reference: ring-buffer cache of capacity == sliding_window."""
+    W = cfg.sliding_window
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache, pos = T.prefill(cfg, params, toks, capacity=W)
+    out = [int(jnp.argmax(logits[0]))]
+    step = jax.jit(lambda p, t, c, q: T.decode_step(cfg, p, t, c, q, window=W))
+    pos = np.int32(pos)
+    for _ in range(n_new - 1):
+        logits, cache = step(params, jnp.asarray([out[-1]], jnp.int32),
+                             cache, jnp.asarray(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def _windowed_cfg32(arch, window=16):
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32",
+                               kv_dtype="float32", sliding_window=window)
+
+
+def _run_windowed_engine(cfg32, prompts, n_new, max_seq=64):
+    eng = RealEngine(cfg32, EngineConfig(max_slots=4, max_seq=max_seq,
+                                         replicate=False),
+                     n_instances=1, seed=0)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt_len=len(p), max_new_tokens=n_new,
+                           arrival_time=0.0, prompt_tokens=p))
+    done = eng.run(400)
+    assert len(done) == len(prompts)
+    return eng, done
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b",
+                                  "recurrentgemma-9b"])
+def test_windowed_equivalence_past_boundary(arch):
+    """Recycled-window paged decode == windowed ring reference, byte-
+    identical per family, with generation running well past the sliding
+    window (the old engine refused max_seq > window outright)."""
+    cfg32 = _windowed_cfg32(arch)                        # window 16
+    n_new = 32                                           # crosses W at ~16
+    prompts = _prompts(cfg32, 3, seed=5, lo=5, hi=14)    # prompt < window
+    eng, done = _run_windowed_engine(cfg32, prompts, n_new)
+    for i, p in enumerate(prompts):
+        if arch == "llama3-8b":
+            ref = _dense_windowed_greedy(cfg32, eng.params, p, n_new)
+        elif arch == "mixtral-8x7b":
+            ref = _moe_greedy(cfg32, eng.params, p, n_new)
+        else:
+            ref = _hybrid_greedy(cfg32, eng.params, p, n_new)
+        got = next(r for r in done if r.rid == i).output_tokens
+        assert got == ref, f"{arch} request {i}: recycled paged != windowed ref"
+
+
+def test_windowed_long_prompt_matches_full_recompute():
+    """Prompts LONGER than the window: admission materializes only the
+    window-covering tail pages (logical idx > 0 from step one). The ring
+    reference's prefill arithmetic breaks in this regime, so compare
+    against a full windowed re-forward per step."""
+    cfg32 = _windowed_cfg32("llama3-8b")                 # window 16
+    n_new = 6
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg32.vocab_size, n).tolist()
+               for n in (17, 25, 31)]                    # all > window
+    eng, done = _run_windowed_engine(cfg32, prompts, n_new)
+    for i, p in enumerate(prompts):
+        toks = list(p)
+        ref = []
+        for _ in range(n_new):
+            logits = T.forward(cfg32, eng.params,
+                               jnp.asarray([toks], jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+            ref.append(nxt)
+            toks.append(nxt)
+        got = next(r for r in done if r.rid == i).output_tokens
+        assert got == ref, f"long-prompt request {i}: paged != recompute"
+
+
+def test_table_pages_ring_bound():
+    """Windowed archs get a ring-sized block table, never wider than the
+    full sequence needs."""
+    cfg = get_config("recurrentgemma-9b").reduced()      # window 64, page 8
+    assert PD.table_pages(cfg, 64) == 8                  # <= window: full
+    assert PD.table_pages(cfg, 128) == 9                 # ring: 64/8 + 1
+    assert PD.table_pages(cfg, 1024) == 9
+    dense = get_config("llama3-8b").reduced()
+    assert PD.table_pages(dense, 128) == 16              # no window: full
+
+
 def test_paged_noise_within_bf16_ulp(cfg):
     """Under production bf16 storage the paged and dense paths must agree
     to bf16 precision: every greedy token the paged engine picks carries a
