@@ -2,10 +2,12 @@
 during failure-free operation (KevlarFlow vs replication-off baseline).
 
 Also measures REAL replication traffic on the paged engine: bytes/step and
-blocks/step for full-snapshot vs dirty-block-delta modes (the tentpole win
-— per-step traffic proportional to dirty blocks, ~1 block per active
-request, instead of the whole live cache). Results land in
-``BENCH_paged.json``."""
+blocks/step for full-snapshot vs dirty-block-delta vs int8-quantized-delta
+modes (delta: per-step traffic proportional to dirty blocks, ~1 block per
+active request, instead of the whole live cache; int8: the same dirty
+blocks at ~half the bytes per message — int8 pages + scales, and ~4x
+smaller hybrid state blobs). Results land in ``BENCH_paged.json``
+(``replication_traffic*`` and ``int8`` sections)."""
 from __future__ import annotations
 
 import json
@@ -40,7 +42,11 @@ def update_bench_json(section: str, payload):
 def replication_traffic(mode: str, arch: str = "llama3-8b",
                         n_requests: int = 6, prompt: int = 24,
                         out: int = 24):
-    """Run the real paged engine and read its replication counters."""
+    """Run the real paged engine and read its replication counters.
+
+    mode: "full" | "delta" | "int8" — int8 is delta replication over the
+    quantized pool (EngineConfig.kv_quant): int8 KV pages + scales on the
+    wire instead of bf16, int8 state blobs + one scale on hybrid."""
     import numpy as np
     from repro.configs import get_config
     from repro.serving.engine import EngineConfig, RealEngine
@@ -48,7 +54,9 @@ def replication_traffic(mode: str, arch: str = "llama3-8b",
 
     cfg = get_config(arch).reduced()
     eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=96,
-                                       replication=mode),
+                                       replication="delta" if mode == "int8"
+                                       else mode,
+                                       kv_quant=(mode == "int8")),
                      n_instances=2, seed=0)
     rng = np.random.default_rng(0)
     for i in range(n_requests):
@@ -57,6 +65,7 @@ def replication_traffic(mode: str, arch: str = "llama3-8b",
             prompt_tokens=rng.integers(1, cfg.vocab_size, prompt).tolist()))
     eng.run(400)
     stats = eng.replication_stats()
+    stats["mode"] = mode               # "int8" runs delta under the hood
     stats["block_bytes"] = eng.instances[0].pool.block_nbytes
     stats["blob_bytes"] = eng.instances[0].pool.blob_nbytes
     stats["live_cache_blocks_per_request"] = \
@@ -137,12 +146,13 @@ def main(fast: bool = True):
                                 round(ov, 2), round(ovp, 2)))
     emit(rows, HEADER)
 
-    # real paged-engine replication traffic: full snapshot vs dirty deltas,
-    # one arch per paged family
+    # real paged-engine replication traffic: full snapshot vs dirty deltas
+    # vs int8-quantized deltas, one arch per paged family
     trows = []
+    int8_section = {}
     for arch in TRAFFIC_ARCHS:
         traffic = {}
-        for mode in ("full", "delta"):
+        for mode in ("full", "delta", "int8"):
             s = replication_traffic(mode, arch=arch)
             traffic[mode] = s
             trows.append(fmt_row("repl_traffic", arch, mode,
@@ -157,6 +167,23 @@ def main(fast: bool = True):
         section = "replication_traffic" if arch == "llama3-8b" \
             else f"replication_traffic_{arch.replace('-', '_')}"
         update_bench_json(section, traffic)
+        # int8 pool vs the bf16 pool, both on delta replication: the same
+        # dirty blocks, ~half the bytes per message (int8 payload + scales);
+        # on hybrid the state blob shrinks ~4x (f32 words -> int8 + scale)
+        int8_section[arch] = {
+            "bf16_bytes_per_step": traffic["delta"]["bytes_per_step"],
+            "int8_bytes_per_step": traffic["int8"]["bytes_per_step"],
+            "bf16_bytes_total": traffic["delta"]["bytes_total"],
+            "int8_bytes_total": traffic["int8"]["bytes_total"],
+            "bf16_block_bytes": traffic["delta"]["block_bytes"],
+            "int8_block_bytes": traffic["int8"]["block_bytes"],
+            "bf16_blob_bytes": traffic["delta"]["blob_bytes"],
+            "int8_blob_bytes": traffic["int8"]["blob_bytes"],
+            "bytes_reduction_x": round(
+                traffic["delta"]["bytes_total"] /
+                max(traffic["int8"]["bytes_total"], 1), 2),
+        }
+    update_bench_json("int8", int8_section)
     emit(trows, TRAFFIC_HEADER)
 
     # sliding-window recycling: resident footprint + traffic at 2x window

@@ -75,7 +75,8 @@ def run_real(args):
     n_req, prompt, out = 6, 10, 24
 
     def run(fail: bool):
-        eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=max_seq),
+        eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=max_seq,
+                                           kv_quant=args.kv_quant),
                          n_instances=2, seed=0)
         rng = np.random.default_rng(7)
         reqs = [Request(rid=i, prompt_len=prompt, max_new_tokens=out,
@@ -96,7 +97,8 @@ def run_real(args):
         eng.run(2000)
         return eng, reqs
 
-    print(f"[real engine] {cfg.name} ({cfg.arch_type} family), "
+    pool_kind = "int8 pool" if args.kv_quant else "bf16 pool"
+    print(f"[real engine] {cfg.name} ({cfg.arch_type} family, {pool_kind}), "
           f"2 instances, {n_req} requests x {out} tokens")
     _, normal = run(fail=False)
     eng, failed = run(fail=True)
@@ -121,6 +123,9 @@ def main():
     ap.add_argument("--arch", default="llama3-8b",
                     help="real engine: any dense/moe/hybrid arch id")
     ap.add_argument("--rps", type=float, default=7.0)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="real engine: int8 KV pool (failover resumes on "
+                         "identical quantized bytes)")
     args = ap.parse_args()
     if args.engine == "real":
         run_real(args)

@@ -3,9 +3,11 @@ KV pool (per-token, per-kv-head symmetric scales) — the kernel-level
 counterpart of the §Perf int8-KV optimization: halves the HBM read per
 decode step AND halves KevlarFlow's replication bandwidth per block.
 
-Same grid/scalar-prefetch design as paged_attention.py; dequantization
-happens in VMEM right after the page DMA (int8 page + bf16 scales), so HBM
-sees only the quantized bytes.
+Same grid/scalar-prefetch design as paged_attention.py — including the
+``starts`` window-lower-bound operand and the fully-masked-page softmax
+guard, so sliding-window recycling composes with the quantized pool;
+dequantization happens in VMEM right after the page DMA (int8 page + bf16
+scales), so HBM sees only the quantized bytes.
 """
 from __future__ import annotations
 
@@ -19,8 +21,13 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 NEG_INF = -1e30
 
+# per-row scale carrier: the pool stores scales in this dtype and the
+# kernel/ref dequantize with exactly these bytes, so quantize -> serve ->
+# replicate -> promote round-trips bit-identically
+SCALE_DTYPE = jnp.bfloat16
 
-def _kernel(bt_ref, len_ref,
+
+def _kernel(bt_ref, len_ref, start_ref,
             q_ref, k_ref, ks_ref, v_ref, vs_ref,
             o_ref,
             m_ref, l_ref, acc_ref):
@@ -44,14 +51,20 @@ def _kernel(bt_ref, len_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    # mask tokens beyond this sequence's length AND below its window start
+    # (sliding-window recycling: positions are window-relative; resident
+    # pages can carry a stale prefix older than the attention window)
     pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (rep, page), 1)
-    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+    valid = (pos >= start_ref[b]) & (pos < len_ref[b])
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[:, :1]
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)
+    # the where keeps fully-masked pages exact: with m_new still NEG_INF,
+    # exp(s - m_new) == exp(0) would otherwise leak weight 1 per token
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -65,26 +78,31 @@ def _kernel(bt_ref, len_ref,
 
 
 def paged_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
-                         block_tables, lengths, *, interpret: bool = False):
+                         block_tables, lengths, starts=None,
+                         *, interpret: bool = False):
     """q: (B, H, D) float; k/v_pages: (K, P, page, D) int8;
-    k/v_scales: (K, P, page, 1) bf16/f32; block_tables: (B, pages) int32;
-    lengths: (B,) int32. Returns (B, H, D) in q.dtype."""
+    k/v_scales: (K, P, page, 1) SCALE_DTYPE (bf16); block_tables:
+    (B, pages) int32; lengths: (B,) int32; starts: optional (B,) int32
+    window lower bound — positions < starts[b] are masked out (None ≡
+    zeros, the full-prefix behaviour). Returns (B, H, D) in q.dtype."""
     b, h, d = q.shape
     kheads, n_phys, page, _ = k_pages.shape
     rep = h // kheads
     pages_per_seq = block_tables.shape[1]
     qr = q.reshape(b, kheads, rep, d)
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
 
-    def q_map(b_, k_, i_, bt, ln):
+    def q_map(b_, k_, i_, bt, ln, st):
         return (b_, k_, 0, 0)
 
-    def kv_map(b_, k_, i_, bt, ln):
+    def kv_map(b_, k_, i_, bt, ln, st):
         return (k_, bt[b_, i_], 0, 0)
 
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(b, kheads, pages_per_seq),
             in_specs=[
                 pl.BlockSpec((None, None, rep, d), q_map),
@@ -102,13 +120,25 @@ def paged_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kheads, rep, d), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, qr, k_pages, k_scales, v_pages, v_scales)
+    )(block_tables, lengths, starts, qr, k_pages, k_scales, v_pages, v_scales)
     return out.reshape(b, h, d)
 
 
 def quantize_pages(pages):
-    """(K, P, page, D) float -> (int8 pages, scales (K,P,page,1))."""
-    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=-1, keepdims=True)
-    scales = amax / 127.0 + 1e-8
-    q = jnp.clip(jnp.round(pages.astype(jnp.float32) / scales), -127, 127)
-    return q.astype(jnp.int8), scales.astype(jnp.float32)
+    """(..., D) float -> (int8 values, scales (..., 1) SCALE_DTYPE).
+
+    Per-row symmetric quantization over the last axis. An all-zero row gets
+    scale 1 (not an epsilon floor) so it round-trips to EXACT zeros with no
+    0/eps noise and no NaN; quantization divides by the bf16-rounded scale
+    the pool will actually store, so dequantizing with the stored scale is
+    the inverse the kernel sees."""
+    x = pages.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0).astype(SCALE_DTYPE)
+    q = jnp.clip(jnp.round(x / scales.astype(jnp.float32)), -127, 127)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_pages(q, scales):
+    """Inverse of ``quantize_pages``: (..., D) int8 * (..., 1) scale -> f32."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)

@@ -69,9 +69,10 @@ def ssd_scan_ref(xdt, a, B, C, h0=None):
 
 
 def paged_attention_int8_ref(q, k_pages, k_scales, v_pages, v_scales,
-                             block_tables, lengths):
-    """Oracle for the int8 kernel: dequantize then run the float oracle."""
+                             block_tables, lengths, starts=None):
+    """Oracle for the int8 kernel: dequantize then run the float oracle
+    (same optional ``starts`` window lower bound)."""
     k = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)
     v = v_pages.astype(jnp.float32) * v_scales.astype(jnp.float32)
     return paged_attention_ref(q.astype(jnp.float32), k, v,
-                               block_tables, lengths).astype(q.dtype)
+                               block_tables, lengths, starts).astype(q.dtype)

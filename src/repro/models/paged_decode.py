@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.paged_attention_int8 import (dequantize_pages,
+                                                quantize_pages)
 from repro.models import hybrid as H
 from repro.models import layers as L
 from repro.models import moe as M
@@ -143,26 +145,43 @@ def pack_pages(k_seq, v_seq, n_pages: int, page: int):
 
 def _paged_attn_layer(cfg, p, x, kl, vl, block_tables, lengths, dst_block,
                       dst_off, positions, *, norm_key: str,
-                      interpret: bool | None, starts=None):
+                      interpret: bool | None, starts=None,
+                      kl_scale=None, vl_scale=None):
     """One attention layer of the paged decode hot loop, shared by every
     family: scatter this step's KV into the current page, attend via the
     Pallas kernel, apply the family MLP. ``norm_key`` names the pre-attn
     norm param ("norm_attn" dense/moe, "norm_t" hybrid). ``starts`` is the
     per-slot window start relative to the first resident page (sliding-
     window recycling); None means attend from position 0.
-    Returns (x, kl, vl)."""
+
+    When ``kl_scale``/``vl_scale`` are given the pool is int8: the step's
+    new KV rows are quantized (per-token symmetric scales) before the
+    scatter and attention runs through the int8 kernel — HBM only ever sees
+    quantized bytes on this path.
+    Returns (x, kl, vl, kl_scale, vl_scale)."""
     h = L.rms_norm(x, p[norm_key], cfg.norm_eps)
     q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)   # (B,1,{H,K},D)
-    kl = kl.at[:, dst_block, dst_off].set(
-        jnp.swapaxes(k[:, 0], 0, 1).astype(kl.dtype))    # (K,B,D) scatter
-    vl = vl.at[:, dst_block, dst_off].set(
-        jnp.swapaxes(v[:, 0], 0, 1).astype(vl.dtype))
-    o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths, starts,
-                            interpret=interpret)
+    k_rows = jnp.swapaxes(k[:, 0], 0, 1)                 # (K, B, D)
+    v_rows = jnp.swapaxes(v[:, 0], 0, 1)
+    if kl_scale is not None:
+        kq, ks = quantize_pages(k_rows)
+        vq, vs = quantize_pages(v_rows)
+        kl = kl.at[:, dst_block, dst_off].set(kq)
+        vl = vl.at[:, dst_block, dst_off].set(vq)
+        kl_scale = kl_scale.at[:, dst_block, dst_off].set(ks)
+        vl_scale = vl_scale.at[:, dst_block, dst_off].set(vs)
+        o = ops.paged_attention_int8(q[:, 0], kl, kl_scale, vl, vl_scale,
+                                     block_tables, lengths, starts,
+                                     interpret=interpret)
+    else:
+        kl = kl.at[:, dst_block, dst_off].set(k_rows.astype(kl.dtype))
+        vl = vl.at[:, dst_block, dst_off].set(v_rows.astype(vl.dtype))
+        o = ops.paged_attention(q[:, 0], kl, vl, block_tables, lengths,
+                                starts, interpret=interpret)
     x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype))
     h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
     x = x + mlp_apply(cfg, p, h, decode=True)
-    return x, kl, vl
+    return x, kl, vl, kl_scale, vl_scale
 
 
 def _sample_head(cfg, params, x, rng, temperature):
@@ -200,7 +219,8 @@ def _window_addressing(cfg, page: int, block_tables, pos, base):
 
 
 def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
-                      pos, rng=None, *, base=None, temperature: float = 0.0,
+                      pos, rng=None, *, base=None, k_scales=None,
+                      v_scales=None, temperature: float = 0.0,
                       interpret: bool | None = None):
     """One decode step for B slots over the paged pool.
 
@@ -212,30 +232,47 @@ def decode_step_paged(cfg, params, token, k_pages, v_pages, block_tables,
     absolute position of each slot's first resident page under sliding-
     window recycling (None ≡ zeros: nothing recycled).
 
+    Quantized pool: pass ``k_scales``/``v_scales`` (L, K, P, page, 1) with
+    int8 ``k_pages``/``v_pages`` — the step quantizes its new KV rows,
+    attends through the int8 kernel, and additionally returns the updated
+    scale arrays.
+
     Each layer scatters the new KV into
     (block_tables[b, (pos-base)//page], pos%page) and attends via the Pallas
     paged kernel over [max(0, pos+1-window), pos] — recycled pages are
     simply absent from the table. Sampling stays on device: returns
-    (next_token (B,), logits (B, V), k_pages, v_pages) with a single host
-    sync left to the caller.
+    (next_token (B,), logits (B, V), k_pages, v_pages[, k_scales, v_scales])
+    with a single host sync left to the caller.
     """
     page = k_pages.shape[3]
+    quant = k_scales is not None
     dst_block, dst_off, lengths, starts = _window_addressing(
         cfg, page, block_tables, pos, base)
     positions = pos[:, None]
     x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
 
     def body(x, layer):
-        p, (kl, vl) = layer
-        x, kl, vl = _paged_attn_layer(cfg, p, x, kl, vl, block_tables,
-                                      lengths, dst_block, dst_off, positions,
-                                      norm_key="norm_attn",
-                                      interpret=interpret, starts=starts)
-        return x, (kl, vl)
+        if quant:
+            p, (kl, vl, ksl, vsl) = layer
+        else:
+            p, (kl, vl) = layer
+            ksl = vsl = None
+        x, kl, vl, ksl, vsl = _paged_attn_layer(
+            cfg, p, x, kl, vl, block_tables, lengths, dst_block, dst_off,
+            positions, norm_key="norm_attn", interpret=interpret,
+            starts=starts, kl_scale=ksl, vl_scale=vsl)
+        return x, ((kl, vl, ksl, vsl) if quant else (kl, vl))
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["layers"], (k_pages, v_pages)))
+    if quant:
+        x, (k_pages, v_pages, k_scales, v_scales) = jax.lax.scan(
+            body, x, (params["layers"],
+                      (k_pages, v_pages, k_scales, v_scales)))
+    else:
+        x, (k_pages, v_pages) = jax.lax.scan(
+            body, x, (params["layers"], (k_pages, v_pages)))
     nxt, logits = _sample_head(cfg, params, x, rng, temperature)
+    if quant:
+        return nxt, logits, k_pages, v_pages, k_scales, v_scales
     return nxt, logits, k_pages, v_pages
 
 
@@ -286,7 +323,8 @@ def prefill_hybrid_bucketed(cfg, params, tokens, true_len, *,
 
 def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
                              block_tables, blob_slots, pos, rng=None, *,
-                             base=None, temperature: float = 0.0,
+                             base=None, k_scales=None, v_scales=None,
+                             blob_scales=None, temperature: float = 0.0,
                              interpret: bool | None = None):
     """One hybrid decode step: paged attention for the local-attn layers
     (pool layer axis = attn layers in depth order), O(1) RG-LRU steps for
@@ -301,14 +339,27 @@ def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
     int32 first-resident-page position (sliding-window recycling — the
     local-attention window IS cfg.sliding_window, so tables hold only the
     resident ring once decode passes it).
-    Returns (next_token, logits, k_pages, v_pages, blobs).
+
+    Quantized pool: pass ``k_scales``/``v_scales``/``blob_scales`` with
+    int8 pages and blobs. The recurrent state is dequantized from the int8
+    blob, advanced one step, and re-quantized back — the quantized blob
+    stays the source of truth, so a promoted replica (identical int8 bytes
+    + scales) resumes bit-identically.
+    Returns (next_token, logits, k_pages, v_pages, blobs[, k_scales,
+    v_scales, blob_scales]).
     """
     page = k_pages.shape[3]
+    quant = k_scales is not None
     dst_block, dst_off, lengths, starts = _window_addressing(
         cfg, page, block_tables, pos, base)
     positions = pos[:, None]
     x = L.embed(params["embed"], token[:, None])         # (B, 1, d)
-    states = H.unpack_state_blob(cfg, blobs[blob_slots])
+    if quant:
+        state_vec = dequantize_pages(blobs[blob_slots],
+                                     blob_scales[blob_slots])
+    else:
+        state_vec = blobs[blob_slots]
+    states = H.unpack_state_blob(cfg, state_vec)
     new_states = []
     ai = ri = 0
     for p, kind in zip(params["layers"], cfg.layer_kinds()):
@@ -317,13 +368,28 @@ def decode_step_paged_hybrid(cfg, params, token, k_pages, v_pages, blobs,
             new_states.append(st)
             ri += 1
         else:
-            x, kl, vl = _paged_attn_layer(
+            ksl = k_scales[ai] if quant else None
+            vsl = v_scales[ai] if quant else None
+            x, kl, vl, ksl, vsl = _paged_attn_layer(
                 cfg, p, x, k_pages[ai], v_pages[ai], block_tables, lengths,
                 dst_block, dst_off, positions, norm_key="norm_t",
-                interpret=interpret, starts=starts)
+                interpret=interpret, starts=starts,
+                kl_scale=ksl, vl_scale=vsl)
             k_pages = k_pages.at[ai].set(kl)
             v_pages = v_pages.at[ai].set(vl)
+            if quant:
+                k_scales = k_scales.at[ai].set(ksl)
+                v_scales = v_scales.at[ai].set(vsl)
             ai += 1
-    blobs = blobs.at[blob_slots].set(H.pack_state_blob(cfg, new_states))
+    new_blob = H.pack_state_blob(cfg, new_states)
+    if quant:
+        bq, bs = quantize_pages(new_blob)
+        blobs = blobs.at[blob_slots].set(bq)
+        blob_scales = blob_scales.at[blob_slots].set(bs)
+    else:
+        blobs = blobs.at[blob_slots].set(new_blob)
     nxt, logits = _sample_head(cfg, params, x, rng, temperature)
+    if quant:
+        return (nxt, logits, k_pages, v_pages, blobs,
+                k_scales, v_scales, blob_scales)
     return nxt, logits, k_pages, v_pages, blobs

@@ -66,6 +66,11 @@ class EngineConfig:
     replication: str = "delta"   # "delta" (dirty blocks) | "full" (all blocks)
     pool_blocks: int = 0         # 0 -> primaries + replicas + scratch
     interpret: Optional[bool] = None  # None -> auto (interpret off-TPU)
+    # int8-quantized KV pool: pages (and hybrid state blobs) are stored as
+    # int8 + per-row scales, decode runs through the int8 Pallas kernel,
+    # and replication ships the quantized bytes — roughly half the HBM read
+    # per decode step and half the bytes per replication message
+    kv_quant: bool = False
 
 
 class RealInstance:
@@ -99,7 +104,7 @@ class RealInstance:
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, real=True,
             dtype=PD.kv_dtype(cfg), blob_words=blob_words,
             n_blobs=(2 * B + 1) if blob_words else 0,
-            window=self.window)
+            window=self.window, quantized=ecfg.kv_quant)
         # idle batch slots write/attend into one scratch block, never freed
         self.scratch = self.pool.allocate(SCRATCH_RID, 1)[0].slot
         self.block_table = np.full((B, self.pages_per_seq), self.scratch,
@@ -122,26 +127,35 @@ class RealInstance:
         # per-instance sampling stream (used only when temperature > 0)
         self._rng = jax.random.PRNGKey(instance_id + 1)
 
+        # one step wrapper per family; the int8 pool threads its scale side
+        # arrays through the same signature (None when kv_quant is off —
+        # leafless pytree args, so the jit program is identical to before).
+        # Pool buffers are donated: decode updates pages/scales/blobs in
+        # place. Donation indices cover only real buffers.
+        quant = ecfg.kv_quant
         if self.family == "hybrid":
-            def _step(p, tok, k_pages, v_pages, blobs, bt, bslots, pos, base,
-                      rng):
+            def _step(p, tok, k_pages, v_pages, ks, vs, blobs, bscales,
+                      bt, bslots, pos, base, rng):
                 return PD.decode_step_paged_hybrid(
-                    cfg, p, tok, k_pages, v_pages, blobs, bt, bslots, pos,
-                    rng, base=base, temperature=temp, interpret=interp)
+                    cfg, p, tok, k_pages, v_pages, blobs, bt, bslots,
+                    pos, rng, base=base, k_scales=ks, v_scales=vs,
+                    blob_scales=bscales, temperature=temp,
+                    interpret=interp)
 
-            # pool buffers are donated: decode updates pages/blobs in place
-            self._decode = jax.jit(_step, donate_argnums=(2, 3, 4))
+            self._decode = jax.jit(
+                _step,
+                donate_argnums=(2, 3, 4, 5, 6, 7) if quant else (2, 3, 6))
             self._prefill = jax.jit(
                 lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
         else:
-            def _step(p, tok, k_pages, v_pages, bt, pos, base, rng):
-                return PD.decode_step_paged(cfg, p, tok, k_pages, v_pages, bt,
-                                            pos, rng, base=base,
-                                            temperature=temp,
-                                            interpret=interp)
+            def _step(p, tok, k_pages, v_pages, ks, vs, bt, pos, base, rng):
+                return PD.decode_step_paged(
+                    cfg, p, tok, k_pages, v_pages, bt, pos, rng,
+                    base=base, k_scales=ks, v_scales=vs,
+                    temperature=temp, interpret=interp)
 
-            # pool buffers are donated: decode updates pages in place
-            self._decode = jax.jit(_step, donate_argnums=(2, 3))
+            self._decode = jax.jit(
+                _step, donate_argnums=(2, 3, 4, 5) if quant else (2, 3))
             self._prefill = jax.jit(
                 lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
 
@@ -154,9 +168,23 @@ class RealInstance:
         evicting hosted replicas under pressure (the paper's rule: replicas
         are the first thing dropped)."""
         need = self.pool.resident_blocks_for(n_tokens)
-        if need > self.pool.n_free:
+        if need > self.pool.n_free and not self.pool.window:
+            # unwindowed pools raise without evicting. Windowed pools get
+            # the cheaper remedy first: allocate's own fallback recycles
+            # live requests' out-of-window head pages and only then evicts
+            # hosted replicas — pre-evicting here would drop peers'
+            # failover state that recycling could have kept.
             self.pool.evict_replicas_for_pressure(need)
-        refs = self.pool.allocate(rid, n_tokens)
+        try:
+            refs = self.pool.allocate(rid, n_tokens)
+        finally:
+            # allocate's windowed fallback may have recycled other
+            # requests' out-of-window head pages — even on a failed
+            # allocation their hosted replicas still need retiring on the
+            # ring peer, or the host leaks blocks for the request's life
+            self.pending_retires.extend(
+                (r.rid, r.logical_idx)
+                for r in self.pool.drain_pending_recycles())
         if self.family == "hybrid":
             self.pool.evict_blob_replicas_for_pressure()
             try:
@@ -241,6 +269,9 @@ class RealInstance:
             except MemoryError:
                 self.pool.evict_replicas_for_pressure(1)
                 ref = self.pool.append_token(rid)
+            self.pending_retires.extend(
+                (r.rid, r.logical_idx)
+                for r in self.pool.drain_pending_recycles())
             if self.window:
                 # window-relative row: column j = j-th resident page
                 table = self.pool.table(rid)
@@ -257,17 +288,29 @@ class RealInstance:
             self._rng, step_rng = jax.random.split(self._rng)
         else:
             step_rng = self._rng               # unused by greedy sample()
+        pool = self.pool
         if self.family == "hybrid":
-            nxt, _, self.pool.k, self.pool.v, self.pool.blobs = self._decode(
-                self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
-                self.pool.blobs, jnp.asarray(self.block_table),
-                jnp.asarray(self.slot_blob), jnp.asarray(self.slot_pos),
-                jnp.asarray(self.slot_base), step_rng)
+            out = self._decode(
+                self.params, jnp.asarray(toks), pool.k, pool.v,
+                pool.k_scale, pool.v_scale, pool.blobs, pool.blob_scales,
+                jnp.asarray(self.block_table), jnp.asarray(self.slot_blob),
+                jnp.asarray(self.slot_pos), jnp.asarray(self.slot_base),
+                step_rng)
+            if pool.quantized:
+                (nxt, _, pool.k, pool.v, pool.blobs, pool.k_scale,
+                 pool.v_scale, pool.blob_scales) = out
+            else:
+                nxt, _, pool.k, pool.v, pool.blobs = out
         else:
-            nxt, _, self.pool.k, self.pool.v = self._decode(
-                self.params, jnp.asarray(toks), self.pool.k, self.pool.v,
-                jnp.asarray(self.block_table), jnp.asarray(self.slot_pos),
-                jnp.asarray(self.slot_base), step_rng)
+            out = self._decode(
+                self.params, jnp.asarray(toks), pool.k, pool.v,
+                pool.k_scale, pool.v_scale, jnp.asarray(self.block_table),
+                jnp.asarray(self.slot_pos), jnp.asarray(self.slot_base),
+                step_rng)
+            if pool.quantized:
+                (nxt, _, pool.k, pool.v, pool.k_scale, pool.v_scale) = out
+            else:
+                nxt, _, pool.k, pool.v = out
         nxt = np.asarray(nxt)          # the step's single host sync
         finished = []
         for i in active:

@@ -19,6 +19,10 @@ import numpy as np
 try:  # real-buffer mode is optional (sim benchmarks never touch jax)
     import jax
     import jax.numpy as jnp
+
+    from repro.kernels.paged_attention_int8 import (SCALE_DTYPE,
+                                                    dequantize_pages,
+                                                    quantize_pages)
 except Exception:  # pragma: no cover
     jax = None
     jnp = None
@@ -50,16 +54,27 @@ class PagedKVPool:
     def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
                  n_kv_heads: int = 0, head_dim: int = 0, real: bool = False,
                  dtype="bfloat16", blob_words: int = 0, n_blobs: int = 0,
-                 window: int = 0):
+                 window: int = 0, quantized: bool = False):
         self.n_blocks = n_blocks
         self.page_size = page_size
         self.real = real
+        # int8 mode: k/v pages are stored int8 with per-(layer, head, token)
+        # symmetric scales in (L, K, P, page, 1) SCALE_DTYPE side arrays;
+        # blobs are int8 with one scale per blob. write paths quantize on
+        # block write; replication ships the int8 bytes + scales verbatim,
+        # so a promoted replica is bit-identical on the quantized
+        # representation.
+        self.quantized = quantized
         # sliding-window ring view: when window > 0, each request keeps only
         # the blocks that can still fall inside the attention window; blocks
         # fully below it are recycled (``recycle_out_of_window``). BlockRef
         # .logical_idx is the ABSOLUTE logical page index in both modes, so
         # a table is always a contiguous ascending run of pages.
         self.window = window
+        # pages recycled INSIDE allocate's windowed pressure fallback (the
+        # caller never saw them returned): the engine drains these into
+        # retire messages so hosted replicas stay in lockstep
+        self.pending_recycles: List[BlockRef] = []
         self._free: List[int] = list(range(n_blocks))
         self._tables: Dict[int, List[BlockRef]] = {}      # rid -> blocks
         # replica blocks hosted on behalf of peers: (peer_node, rid) -> slots
@@ -73,26 +88,50 @@ class PagedKVPool:
         self._blob_free: List[int] = list(range(n_blobs))
         self._blob_refs: Dict[int, BlockRef] = {}         # rid -> blob
         self._blob_replicas: Dict[Tuple[int, int], BlockRef] = {}
+        # scale side arrays exist only on quantized pools; None placeholders
+        # let callers pass pool.k_scale etc. uniformly
+        self.k_scale = self.v_scale = self.blob_scales = None
         if real:
             assert jnp is not None
             shape = (n_layers, n_kv_heads, n_blocks, page_size, head_dim)
-            self.k = jnp.zeros(shape, dtype)
-            self.v = jnp.zeros(shape, dtype)
+            if quantized:
+                self.k = jnp.zeros(shape, jnp.int8)
+                self.v = jnp.zeros(shape, jnp.int8)
+                # scale 1 so zeroed pages dequantize to exact zeros
+                self.k_scale = jnp.ones(shape[:-1] + (1,), SCALE_DTYPE)
+                self.v_scale = jnp.ones(shape[:-1] + (1,), SCALE_DTYPE)
+            else:
+                self.k = jnp.zeros(shape, dtype)
+                self.v = jnp.zeros(shape, dtype)
             if n_blobs:
-                # f32 carrier: bf16 state round-trips losslessly through f32
-                self.blobs = jnp.zeros((n_blobs, blob_words), jnp.float32)
+                if quantized:
+                    self.blobs = jnp.zeros((n_blobs, blob_words), jnp.int8)
+                    self.blob_scales = jnp.ones((n_blobs, 1), SCALE_DTYPE)
+                else:
+                    # f32 carrier: bf16 state round-trips losslessly via f32
+                    self.blobs = jnp.zeros((n_blobs, blob_words), jnp.float32)
 
     @property
     def block_nbytes(self) -> int:
-        """Bytes of one replication message (k+v, all layers of the stage)."""
+        """Bytes of one replication message (k+v, all layers of the stage).
+        Quantized pools ship int8 payloads PLUS their scale rows."""
         if not self.real:
             return 0
         per_slot = self.k.size // self.n_blocks
-        return 2 * per_slot * self.k.dtype.itemsize
+        nbytes = 2 * per_slot * self.k.dtype.itemsize
+        if self.quantized:
+            scale_per_slot = self.k_scale.size // self.n_blocks
+            nbytes += 2 * scale_per_slot * self.k_scale.dtype.itemsize
+        return nbytes
 
     @property
     def blob_nbytes(self) -> int:
-        """Bytes of one blob replication message."""
+        """Bytes of one blob replication message (int8 payload + one scale
+        on a quantized pool, f32 words otherwise)."""
+        if not self.blob_words:
+            return 0
+        if self.quantized:
+            return self.blob_words + jnp.dtype(SCALE_DTYPE).itemsize
         return 4 * self.blob_words
 
     # -- capacity ----------------------------------------------------------
@@ -157,6 +196,17 @@ class PagedKVPool:
                      if self.window else 0)
             need = self.resident_blocks_for(n_tokens)
             remaining = n_tokens - start * self.page_size
+        if need > self.n_free and self.window:
+            # windowed pools can be "full" while live requests still hold
+            # head pages fully below their attention window: recycle those
+            # first, then fall back to the paper's pressure rule (drop
+            # hosted replicas), and only then give up
+            for r in list(self._tables):
+                if self.n_free >= need:
+                    break
+                self.pending_recycles.extend(self.recycle_out_of_window(r))
+            if need > self.n_free:
+                self.evict_replicas_for_pressure(need)
         if need > self.n_free:
             raise MemoryError(f"pool exhausted: need {need}, free {self.n_free}")
         table = self._tables.setdefault(rid, [])
@@ -212,6 +262,12 @@ class PagedKVPool:
             self._free.append(ref.slot)
             recycled.append(ref)
         return recycled
+
+    def drain_pending_recycles(self) -> List[BlockRef]:
+        """Refs recycled inside ``allocate``'s windowed pressure fallback
+        since the last drain (the caller still owes their retire messages)."""
+        out, self.pending_recycles = self.pending_recycles, []
+        return out
 
     def free(self, rid: int):
         for ref in self._tables.pop(rid, []):
@@ -351,23 +407,45 @@ class PagedKVPool:
 
     # -- real-buffer block IO (used by the real-compute engine + tests) -----
     def write_block(self, slot: int, k_block, v_block):
-        """k_block/v_block: (L, K, page, D)."""
-        assert self.real
-        self.k = self.k.at[:, :, slot].set(k_block)
-        self.v = self.v.at[:, :, slot].set(v_block)
+        """k_block/v_block: (L, K, page, D) float — quantized on write when
+        the pool is int8."""
+        self.write_blocks([slot], k_block[:, :, None], v_block[:, :, None])
 
     def write_blocks(self, slots: List[int], k_blocks, v_blocks):
         """Bulk write (admission path): k/v_blocks (L, K, n, page, D) into
-        ``slots`` — one fused scatter instead of n full-pool updates."""
+        ``slots`` — one fused scatter instead of n full-pool updates. On a
+        quantized pool the float blocks are quantized here (per-token rows)
+        and the int8 payload + scales land in one scatter."""
         assert self.real
         idx = jnp.asarray(slots, jnp.int32)
-        self.k, self.v = _scatter_blocks(self.k, self.v, idx,
-                                         k_blocks.astype(self.k.dtype),
-                                         v_blocks.astype(self.v.dtype))
+        if self.quantized:
+            kq, ks = quantize_pages(k_blocks)
+            vq, vs = quantize_pages(v_blocks)
+            (self.k, self.v, self.k_scale, self.v_scale) = _scatter_blocks_q(
+                self.k, self.v, self.k_scale, self.v_scale, idx,
+                kq, vq, ks, vs)
+        else:
+            self.k, self.v = _scatter_blocks(self.k, self.v, idx,
+                                             k_blocks.astype(self.k.dtype),
+                                             v_blocks.astype(self.v.dtype))
 
     def read_block(self, slot: int):
+        """(L, K, page, D) k/v of one block — dequantized to f32 on an int8
+        pool (use ``read_block_quantized`` for the raw wire payload)."""
         assert self.real
+        if self.quantized:
+            return (dequantize_pages(self.k[:, :, slot],
+                                     self.k_scale[:, :, slot]),
+                    dequantize_pages(self.v[:, :, slot],
+                                     self.v_scale[:, :, slot]))
         return self.k[:, :, slot], self.v[:, :, slot]
+
+    def read_block_quantized(self, slot: int):
+        """Raw quantized payload of one block: (k int8, k_scale, v int8,
+        v_scale) — exactly the bytes a replication message carries."""
+        assert self.real and self.quantized
+        return (self.k[:, :, slot], self.k_scale[:, :, slot],
+                self.v[:, :, slot], self.v_scale[:, :, slot])
 
     def copy_block_to(self, other: "PagedKVPool", src_slot: int, dst_slot: int):
         """One block-replication message (paper's yellow arrow)."""
@@ -376,33 +454,66 @@ class PagedKVPool:
     def copy_blocks_to(self, other: "PagedKVPool",
                        src_slots: List[int], dst_slots: List[int]):
         """Batched block replication: this step's dirty blocks in one fused
-        gather/scatter (the per-step delta traffic)."""
+        gather/scatter (the per-step delta traffic). Quantized pools ship
+        the int8 bytes + scales verbatim — no requantization, so the hosted
+        replica is bit-identical to the primary block."""
         if not (self.real and other.real) or not src_slots:
             return
+        assert self.quantized == other.quantized, \
+            "replication peers must agree on KV quantization"
         src = jnp.asarray(src_slots, jnp.int32)
         dst = jnp.asarray(dst_slots, jnp.int32)
-        kb = self.k[:, :, src]
-        vb = self.v[:, :, src]
-        other.k, other.v = _scatter_blocks(other.k, other.v, dst, kb, vb)
+        if self.quantized:
+            (other.k, other.v, other.k_scale, other.v_scale) = \
+                _scatter_blocks_q(other.k, other.v, other.k_scale,
+                                  other.v_scale, dst,
+                                  self.k[:, :, src], self.v[:, :, src],
+                                  self.k_scale[:, :, src],
+                                  self.v_scale[:, :, src])
+        else:
+            kb = self.k[:, :, src]
+            vb = self.v[:, :, src]
+            other.k, other.v = _scatter_blocks(other.k, other.v, dst, kb, vb)
 
     # -- real-buffer blob IO --------------------------------------------------
     def write_blob(self, slot: int, vec):
-        """vec: (blob_words,) f32."""
+        """vec: (blob_words,) f32 — quantized to int8 + one per-blob scale
+        on an int8 pool."""
         assert self.real and self.n_blobs
+        if self.quantized:
+            q, s = quantize_pages(vec[None])
+            self.blobs = self.blobs.at[slot].set(q[0])
+            self.blob_scales = self.blob_scales.at[slot].set(s[0])
+            return
         self.blobs = self.blobs.at[slot].set(vec.astype(jnp.float32))
 
     def read_blob(self, slot: int):
+        """(blob_words,) f32 state — dequantized on an int8 pool (use
+        ``read_blob_quantized`` for the raw wire payload)."""
         assert self.real and self.n_blobs
+        if self.quantized:
+            return dequantize_pages(self.blobs[slot], self.blob_scales[slot])
         return self.blobs[slot]
+
+    def read_blob_quantized(self, slot: int):
+        """Raw quantized blob payload: (int8 (blob_words,), scale (1,))."""
+        assert self.real and self.n_blobs and self.quantized
+        return self.blobs[slot], self.blob_scales[slot]
 
     def copy_blobs_to(self, other: "PagedKVPool",
                       src_slots: List[int], dst_slots: List[int]):
-        """Batched blob replication (this step's dirty recurrent states)."""
+        """Batched blob replication (this step's dirty recurrent states).
+        Quantized pools ship int8 + per-blob scales verbatim."""
         if not (self.real and other.real) or not src_slots:
             return
+        assert self.quantized == other.quantized, \
+            "replication peers must agree on KV quantization"
         src = jnp.asarray(src_slots, jnp.int32)
         dst = jnp.asarray(dst_slots, jnp.int32)
         other.blobs = _scatter_blobs(other.blobs, dst, self.blobs[src])
+        if self.quantized:
+            other.blob_scales = _scatter_blobs(other.blob_scales, dst,
+                                               self.blob_scales[src])
 
 
 if jax is not None:
@@ -410,6 +521,14 @@ if jax is not None:
     def _scatter_blocks(k_pool, v_pool, slots, k_blocks, v_blocks):
         return (k_pool.at[:, :, slots].set(k_blocks),
                 v_pool.at[:, :, slots].set(v_blocks))
+
+    @jax.jit
+    def _scatter_blocks_q(k_pool, v_pool, ks_pool, vs_pool, slots,
+                          k_blocks, v_blocks, k_scales, v_scales):
+        return (k_pool.at[:, :, slots].set(k_blocks),
+                v_pool.at[:, :, slots].set(v_blocks),
+                ks_pool.at[:, :, slots].set(k_scales),
+                vs_pool.at[:, :, slots].set(v_scales))
 
     @jax.jit
     def _scatter_blobs(blob_pool, slots, blobs):

@@ -158,6 +158,9 @@ def main():
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--port", type=int, default=8080)
     ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV pool: quantized pages + scales, int8 "
+                         "decode kernel, ~2x smaller replication messages")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if cfg.n_params() > 3e8:
@@ -165,7 +168,7 @@ def main():
         cfg = cfg.reduced()
     # sliding-window archs serve any max_seq (block recycling keeps only
     # the attention window resident) — no capping needed
-    ecfg = EngineConfig()
+    ecfg = EngineConfig(kv_quant=args.kv_quant)
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "
           f"({args.instances} instances). POST /v1/completions")

@@ -166,8 +166,10 @@ def test_failover_byte_identical_after_replica_eviction(cfg):
     assert all(r.n_retries == 0 for r in failed)
 
 
-def _failover_run(cfg, max_seq: int, fail: bool, steps_before_fail: int = 6):
-    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=max_seq),
+def _failover_run(cfg, max_seq: int, fail: bool, steps_before_fail: int = 6,
+                  **ecfg_kw):
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=max_seq,
+                                       **ecfg_kw),
                      n_instances=2, seed=0)
     reqs = _reqs(cfg, 6, prompt=10, out=24)
     for r in reqs:
@@ -279,10 +281,11 @@ def _windowed_cfg(arch: str, window: int = 24):
 
 
 def _run_windowed(cfg, max_seq, out, fail_at=None, n_req=4, prompt=10,
-                  slots=4, seed=7):
+                  slots=4, seed=7, **ecfg_kw):
     """Drive a windowed engine to completion, tracking peak residency.
     Returns (engine, requests, peak_resident_blocks)."""
-    eng = RealEngine(cfg, EngineConfig(max_slots=slots, max_seq=max_seq),
+    eng = RealEngine(cfg, EngineConfig(max_slots=slots, max_seq=max_seq,
+                                       **ecfg_kw),
                      n_instances=2, seed=0)
     rng = np.random.default_rng(seed)
     reqs = [Request(rid=i, prompt_len=prompt, max_new_tokens=out,
@@ -403,6 +406,108 @@ def test_chaos_failover_random_kill_step(arch):
                 f"kill@{kill}: diverged")
         assert all(r.n_retries == 0 for r in failed), f"kill@{kill}: restart"
         assert peak <= -(-cfg.sliding_window // cfg.page_size) + 1
+
+
+# -- int8 quantized pool (EngineConfig.kv_quant) ------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b",
+                                  "recurrentgemma-9b"])
+def test_int8_failover_byte_identical(arch):
+    """kv_quant=True serves every paged family through the int8 kernel, and
+    failover is byte-identical ON THE QUANTIZED REPRESENTATION: replication
+    ships the primary's int8 bytes + scales verbatim, so the promoted
+    replica decodes exactly the tokens the failure-free quantized run
+    produces."""
+    cfg = get_config(arch).reduced()
+    normal = _failover_run(cfg, max_seq=64, fail=False, kv_quant=True)
+    failed = _failover_run(cfg, max_seq=64, fail=True, kv_quant=True)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)
+
+
+def test_int8_failover_promotes_identical_quantized_bytes():
+    """The mechanism behind the drill above: at failure time the target's
+    hosted replica blocks (and, on hybrid, the state blob) hold EXACTLY the
+    dead primary's int8 payload + scale bytes — promotion flips ownership
+    of bit-identical quantized state, it never requantizes."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=64,
+                                       kv_quant=True),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, prompt=10, out=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    src, tgt = eng.instances
+    victims = list(src.requests)
+    assert victims
+    # replication ran after the last decode -> hosted payloads are current
+    frozen = {}
+    for rid in victims:
+        blocks = {ref.logical_idx:
+                  [np.asarray(a, np.float32)
+                   for a in src.pool.read_block_quantized(ref.slot)]
+                  for ref in src.pool.table(rid)}
+        blob = [np.asarray(a, np.float32) for a in
+                src.pool.read_blob_quantized(src.pool.blob_ref(rid).slot)]
+        frozen[rid] = (blocks, blob)
+    resumed = eng.fail_instance(0)
+    assert set(resumed) == set(victims)
+    for rid in victims:
+        blocks, blob = frozen[rid]
+        for ref in tgt.pool.table(rid):
+            got = [np.asarray(a, np.float32)
+                   for a in tgt.pool.read_block_quantized(ref.slot)]
+            for a, b in zip(blocks[ref.logical_idx], got):
+                np.testing.assert_array_equal(a, b)
+        got_blob = [np.asarray(a, np.float32) for a in
+                    tgt.pool.read_blob_quantized(tgt.pool.blob_ref(rid).slot)]
+        for a, b in zip(blob, got_blob):
+            np.testing.assert_array_equal(a, b)
+    eng.run(2000)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "recurrentgemma-9b"])
+def test_int8_windowed_serving_past_window(arch):
+    """Sliding-window recycling composes with the quantized pool (the int8
+    kernel's new ``starts`` operand): windowed archs serve past their
+    window at max_seq = 2x window with the same residency bound, retire
+    messages flowing, and ~2x fewer replication bytes than bf16."""
+    cfg = get_config(arch).reduced()
+    window, page = cfg.sliding_window, cfg.page_size
+    max_seq = 2 * window
+    prompt, out = 16, window + 24
+    eng, reqs, peak = _run_windowed(cfg, max_seq, out, n_req=2, prompt=prompt,
+                                    slots=2, kv_quant=True)
+    assert all(len(r.output_tokens) == out for r in reqs)
+    assert 0 < peak <= -(-window // page) + 1
+    stats = eng.replication_stats()
+    assert stats["retire_msgs_total"] > 0
+    assert stats["blocks_per_request_step"] <= 1.5
+    # same run on the bf16 pool: the quantized KV message is ~2x smaller
+    engf, _, _ = _run_windowed(cfg, max_seq, out, n_req=2, prompt=prompt,
+                               slots=2)
+    q, f = eng.instances[0].pool, engf.instances[0].pool
+    assert f.block_nbytes / q.block_nbytes > 1.8
+
+
+def test_int8_windowed_failover_byte_identical():
+    """Chaos corner: kill AFTER the window has slid on a quantized pool —
+    the promoted window (int8 bytes + scales) resumes byte-identically."""
+    cfg = _windowed_cfg("mixtral-8x7b")                  # window 24
+    max_seq, out = 96, 60
+    _, normal, _ = _run_windowed(cfg, max_seq, out, kv_quant=True)
+    eng, failed, peak = _run_windowed(cfg, max_seq, out, fail_at=45,
+                                      kv_quant=True)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)
+    assert peak <= -(-cfg.sliding_window // cfg.page_size) + 1
 
 
 def test_unsupported_family_rejected():

@@ -181,7 +181,10 @@ def test_ssd_scan_matches_model_impl():
 # int8 paged attention
 # --------------------------------------------------------------------------
 
-from repro.kernels.paged_attention_int8 import paged_attention_int8, quantize_pages
+from repro.kernels.paged_attention_int8 import (SCALE_DTYPE,
+                                                dequantize_pages,
+                                                paged_attention_int8,
+                                                quantize_pages)
 from repro.kernels.ref import paged_attention_int8_ref
 
 
@@ -210,3 +213,87 @@ def test_int8_quantization_error_bounded():
     out_f = paged_attention_ref(q, kp, vp, bt, ln)
     err = np.abs(np.asarray(out_i8) - np.asarray(out_f))
     assert err.max() < 0.05 * np.abs(np.asarray(out_f)).max()
+
+
+def test_int8_ragged_fully_masked_page_regression():
+    """Regression for the stale int8 softmax: a ragged batch where one
+    sequence's window start leaves its ENTIRE first page masked. Before the
+    fix the kernel had no ``starts`` operand at all, and its softmax let a
+    fully-masked page contribute weight-1 garbage (m_new stuck at NEG_INF
+    makes exp(s - m_new) == 1 for every masked token). Poisoned below-start
+    tokens must therefore be invisible, and the output must match the
+    oracle restricted to [start, length)."""
+    page = 16
+    q, kp, vp, bt, ln = _paged_case(3, 4, 2, 64, page, 3, jnp.float32)
+    ln = jnp.asarray([40, 7, 44], jnp.int32)      # ragged lengths
+    st_ = jnp.asarray([18, 0, 33], jnp.int32)     # seq 0: page 0 fully
+    kq, ks = quantize_pages(kp)                   # masked; seq 2: pages 0-1
+    vq, vs = quantize_pages(vp)
+    out = paged_attention_int8(q, kq, ks, vq, vs, bt, ln, st_, interpret=True)
+    ref = paged_attention_int8_ref(q, kq, ks, vq, vs, bt, ln, st_)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # poison every quantized token below each window start: output unchanged
+    kq2, vq2 = kq, vq
+    for i, s in enumerate([18, 0, 33]):
+        for t in range(s):
+            kq2 = kq2.at[:, bt[i, t // page], t % page].set(127)
+            vq2 = vq2.at[:, bt[i, t // page], t % page].set(127)
+    out2 = paged_attention_int8(q, kq2, ks, vq2, vs, bt, ln, st_,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_attention_int8_starts_none_is_zero():
+    q, kp, vp, bt, ln = _paged_case(2, 4, 2, 64, 16, 3, jnp.float32)
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    out1 = paged_attention_int8(q, kq, ks, vq, vs, bt, ln, interpret=True)
+    out2 = paged_attention_int8(q, kq, ks, vq, vs, bt, ln,
+                                jnp.zeros_like(ln), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 4), rep=st.sampled_from([1, 2]),
+           kheads=st.sampled_from([1, 2]), page=st.sampled_from([8, 16]),
+           pps=st.integers(1, 4), seed=st.integers(0, 10_000))
+    def test_paged_attention_int8_starts_hypothesis(b, rep, kheads, page,
+                                                    pps, seed):
+        """Random window starts vs the int8 oracle (parity with the float
+        kernel's starts sweep)."""
+        rng = np.random.default_rng(seed)
+        q, kp, vp, bt, ln = _paged_case(b, rep * kheads, kheads, 64, page,
+                                        pps, jnp.float32, seed)
+        st_ = jnp.asarray(rng.integers(0, np.asarray(ln)), jnp.int32)
+        kq, ks = quantize_pages(kp)
+        vq, vs = quantize_pages(vp)
+        out = paged_attention_int8(q, kq, ks, vq, vs, bt, ln, st_,
+                                   interpret=True)
+        ref = paged_attention_int8_ref(q, kq, ks, vq, vs, bt, ln, st_)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_quantize_pages_scale_dtype_and_zero_page_roundtrip():
+    """Scales come back in SCALE_DTYPE (the dtype the pool stores and the
+    kernel dequantizes with — one dtype everywhere), and an all-zero page
+    round-trips to EXACT zeros: scale is 1, not an epsilon floor, so there
+    is no 0/eps noise and no NaN anywhere in the pipeline."""
+    rng = np.random.default_rng(0)
+    pages = jnp.asarray(rng.standard_normal((2, 5, 8, 64)), jnp.float32)
+    pages = pages.at[0, 2].set(0.0)               # one all-zero page
+    q, s = quantize_pages(pages)
+    assert q.dtype == jnp.int8
+    assert s.dtype == jnp.dtype(SCALE_DTYPE)
+    back = dequantize_pages(q, s)
+    assert not np.any(np.isnan(np.asarray(back)))
+    np.testing.assert_array_equal(np.asarray(back[0, 2]),
+                                  np.zeros((8, 64), np.float32))
+    np.testing.assert_array_equal(np.asarray(s[0, 2], np.float32),
+                                  np.ones((8, 1), np.float32))
+    # non-zero rows: per-row error bounded by half a quantization step
+    err = np.abs(np.asarray(back) - np.asarray(pages, np.float32))
+    bound = np.asarray(s, np.float32) * 0.5 + 1e-7
+    assert (err <= bound).all()

@@ -171,6 +171,136 @@ def test_windowed_promote_keeps_absolute_pages():
     assert pool.table(5) == refs
 
 
+def test_windowed_allocate_recycles_before_raising():
+    """Regression: a windowed pool that LOOKS full can still serve a fresh
+    prompt when live requests hold head pages fully below their attention
+    window — allocate must recycle those (and then pressure-evict replicas)
+    before raising MemoryError."""
+    pool = PagedKVPool(n_blocks=8, page_size=8, window=16)
+    pool.allocate(1, 50)            # window tail: pages 4-6 (3 blocks)
+    # decode rid 1 forward WITHOUT recycling: its table accrues head pages
+    # that are now fully below the window
+    for _ in range(24):
+        pool.append_token(1)        # 74 abs tokens -> pages 4-9 resident
+    assert pool.n_free == 2
+    # rid 2 needs 3 blocks; only 2 free, but rid 1 has >= 3 recyclable
+    refs = pool.allocate(2, 20)
+    assert [r.logical_idx for r in refs] == [0, 1, 2]
+    recycled = pool.drain_pending_recycles()
+    assert recycled and all(r.rid == 1 for r in recycled)
+    # rid 1's resident run is still contiguous and window-covering
+    pages = [r.logical_idx for r in pool.table(1)]
+    assert pages == list(range(pages[0], pages[0] + len(pages)))
+    assert (pages[0] + 1) * 8 > 74 + 1 - 16
+
+
+def test_windowed_allocate_evicts_replicas_after_recycling():
+    """When recycling alone is not enough, the windowed fallback applies
+    the paper's pressure rule (drop hosted replicas) before giving up."""
+    pool = PagedKVPool(n_blocks=8, page_size=8, window=16)
+    pool.host_replica(0, 99, 5)
+    pool.allocate(1, 20)            # 3 blocks; pool now full
+    assert pool.n_free == 0
+    refs = pool.allocate(2, 20)     # no recyclable pages -> evicts replica
+    assert len(refs) == 3
+    assert pool.replica_table(0, 99) == []
+    # unwindowed pools keep the raise-first contract (engine drives eviction)
+    flat = PagedKVPool(n_blocks=8, page_size=8)
+    flat.host_replica(0, 99, 5)
+    flat.allocate(1, 24)
+    with pytest.raises(MemoryError):
+        flat.allocate(2, 24)
+
+
+# -- int8 quantized pool -----------------------------------------------------
+
+try:
+    import jax.numpy as jnp
+    HAVE_JAX = True
+except ImportError:                     # metadata-mode tests still run
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX,
+                               reason="quantized pool needs real buffers")
+
+
+def _quantized_pool(n_blocks=6, page=4, n_layers=2, kheads=2, d=8, **kw):
+    return PagedKVPool(n_blocks, page, n_layers=n_layers, n_kv_heads=kheads,
+                       head_dim=d, real=True, quantized=True, **kw)
+
+
+@needs_jax
+def test_quantized_pool_write_read_roundtrip():
+    """write_blocks quantizes float blocks on write; read_block dequantizes
+    with the stored scales — error bounded by half a quantization step, and
+    zero pages come back exactly zero."""
+    pool = _quantized_pool()
+    assert pool.k.dtype == jnp.int8 and pool.v.dtype == jnp.int8
+    rng = np.random.default_rng(0)
+    kb = jnp.asarray(rng.standard_normal((2, 2, 2, 4, 8)), jnp.float32)
+    vb = jnp.asarray(rng.standard_normal((2, 2, 2, 4, 8)), jnp.float32)
+    kb = kb.at[0, 0, 0, 1].set(0.0)                  # one zero token row
+    pool.write_blocks([1, 3], kb, vb)
+    k0, v0 = pool.read_block(1)
+    err = np.abs(np.asarray(k0) - np.asarray(kb[:, :, 0]))
+    bound = np.asarray(pool.k_scale[:, :, 1], np.float32) * 0.5 + 1e-7
+    assert (err <= bound).all()
+    np.testing.assert_array_equal(np.asarray(k0[0, 0, 1]),
+                                  np.zeros(8, np.float32))
+    # untouched slots keep unit scales and dequantize to exact zeros
+    k2, _ = pool.read_block(0)
+    np.testing.assert_array_equal(np.asarray(k2),
+                                  np.zeros((2, 2, 4, 8), np.float32))
+
+
+@needs_jax
+def test_quantized_pool_replication_ships_identical_bytes():
+    """copy_blocks_to on quantized pools must ship the int8 payload and
+    scales VERBATIM — the hosted replica is bit-identical, which is what
+    makes quantized failover resume on the same bytes."""
+    src = _quantized_pool()
+    dst = _quantized_pool()
+    rng = np.random.default_rng(1)
+    kb = jnp.asarray(rng.standard_normal((2, 2, 1, 4, 8)), jnp.float32)
+    vb = jnp.asarray(rng.standard_normal((2, 2, 1, 4, 8)), jnp.float32)
+    src.write_blocks([2], kb, vb)
+    src.copy_blocks_to(dst, [2], [5])
+    for a, b in zip(src.read_block_quantized(2), dst.read_block_quantized(5)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@needs_jax
+def test_quantized_block_nbytes_accounts_scales():
+    """The replication message size must count int8 k+v AND the scale side
+    arrays; the quantized message is ~2x smaller than the bf16 one."""
+    q = _quantized_pool(n_blocks=6, page=4, n_layers=2, kheads=2, d=8)
+    f = PagedKVPool(6, 4, n_layers=2, n_kv_heads=2, head_dim=8, real=True)
+    per_row = 2 * 2 * 4                        # L * K * page rows per slot
+    assert f.block_nbytes == 2 * per_row * 8 * 2           # bf16 k+v
+    assert q.block_nbytes == 2 * per_row * 8 + 2 * per_row * 2
+    # at production head_dim the scale overhead is ~3%: message shrinks ~2x
+    q64 = _quantized_pool(n_blocks=6, page=4, n_layers=2, kheads=2, d=64)
+    f64 = PagedKVPool(6, 4, n_layers=2, n_kv_heads=2, head_dim=64, real=True)
+    assert 1.9 < f64.block_nbytes / q64.block_nbytes <= 2.0
+
+
+@needs_jax
+def test_quantized_blob_roundtrip_and_nbytes():
+    pool = _quantized_pool(blob_words=16, n_blobs=3)
+    vec = jnp.asarray(np.linspace(-2.0, 2.0, 16), jnp.float32)
+    pool.write_blob(1, vec)
+    back = np.asarray(pool.read_blob(1))
+    assert np.abs(back - np.asarray(vec)).max() < 2 * 2.0 / 127
+    pool.write_blob(2, jnp.zeros(16, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(pool.read_blob(2)),
+                                  np.zeros(16, np.float32))
+    assert pool.blob_nbytes == 16 + 2          # int8 words + one bf16 scale
+    f = PagedKVPool(6, 4, blob_words=16, n_blobs=3, real=True,
+                    n_layers=1, n_kv_heads=1, head_dim=8)
+    assert f.blob_nbytes == 64                 # f32 carrier
+
+
 # -- blob blocks (opaque per-request state, hybrid RG-LRU) -------------------
 
 def test_blob_alloc_free_roundtrip():
@@ -234,8 +364,9 @@ class PoolActions:
     or a plain numpy RNG identically."""
 
     N_BLOCKS, PAGE, WINDOW, N_BLOBS = 24, 4, 12, 6
-    ACTIONS = ("allocate", "append", "recycle", "free_one", "host_replica",
-               "retire", "promote", "evict", "evict_blobs", "replicate_pass")
+    ACTIONS = ("allocate", "allocate_pressure", "append", "recycle",
+               "free_one", "host_replica", "retire", "promote", "evict",
+               "evict_blobs", "replicate_pass")
 
     def __init__(self):
         self.pool = PagedKVPool(n_blocks=self.N_BLOCKS, page_size=self.PAGE,
@@ -267,6 +398,19 @@ class PoolActions:
             self.live.add(self.rid)
         except MemoryError:
             pass
+
+    def allocate_pressure(self, tokens=1, **_):
+        """Fresh allocation sized past the free list: drives allocate's
+        windowed fallback (recycle live requests' out-of-window head pages,
+        then pressure-evict replicas, only then raise)."""
+        self.rid += 1
+        want = (self.pool.n_free + 1) * self.PAGE + tokens
+        try:
+            self._track(self.pool.allocate(self.rid, want))
+            self.live.add(self.rid)
+        except MemoryError:
+            pass
+        self._track(self.pool.drain_pending_recycles())
 
     def append(self, idx=0, **_):
         rid = self._pick_live(idx)
@@ -430,6 +574,10 @@ if HAVE_HYPOTHESIS:
         @rule(tokens=st.integers(1, 30))
         def allocate(self, tokens):
             self.m.allocate(tokens=tokens)
+
+        @rule(tokens=st.integers(1, 30))
+        def allocate_pressure(self, tokens):
+            self.m.allocate_pressure(tokens=tokens)
 
         @rule(idx=st.integers(0, 7))
         def append(self, idx):

@@ -293,6 +293,93 @@ def test_paged_noise_within_bf16_ulp(cfg):
             continue
 
 
+# -- int8 quantized pool equivalence -----------------------------------------
+#
+# The quantized paged path must match the float paged path to within
+# quantization noise, per family (the step-level analog of
+# test_kernels.test_int8_quantization_error_bounded). Measured noise on the
+# reduced configs is ~1.3% of the logit scale (dense/MoE) and ~1.8% on the
+# hybrid (one scale per state blob is coarser); bounds leave ~3x headroom.
+
+def _prefill_to_pool(cfg32, params, prompt, max_seq):
+    """Run bucketed prefill and lay the prompt KV out as kernel-layout pool
+    buffers + block table, exactly as admission does. Returns
+    (first_token, kp, vp, bt, pos[, blob])."""
+    from repro.kernels.paged_attention_int8 import quantize_pages  # noqa: F401
+    n, page = len(prompt), cfg32.page_size
+    bucket = PD.next_bucket(n, lo=page)
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :n] = prompt
+    pps = PD.table_pages(cfg32, max_seq)
+    npg = bucket // page
+    hybrid = cfg32.arch_type == "hybrid"
+    if hybrid:
+        logits, k_seq, v_seq, blob = PD.prefill_hybrid_bucketed(
+            cfg32, params, jnp.asarray(padded), jnp.int32(n))
+    else:
+        logits, k_seq, v_seq = PD.prefill_bucketed(
+            cfg32, params, jnp.asarray(padded), jnp.int32(n))
+    L_kv = len(PD.kv_layer_indices(cfg32))
+    shape = (L_kv, cfg32.n_kv_heads, pps, page, cfg32.head_dim)
+    kp = jnp.zeros(shape, jnp.float32)
+    vp = jnp.zeros(shape, jnp.float32)
+    kb, vb = PD.pack_pages(k_seq, v_seq, npg, page)
+    kp = kp.at[:, :, :npg].set(kb)
+    vp = vp.at[:, :, :npg].set(vb)
+    bt = jnp.arange(pps, dtype=jnp.int32)[None]
+    pos = jnp.asarray([n], jnp.int32)
+    tok = jnp.asarray([int(jnp.argmax(logits[0]))], jnp.int32)
+    if hybrid:
+        return tok, kp, vp, bt, pos, blob
+    return tok, kp, vp, bt, pos
+
+
+@pytest.mark.parametrize("arch,bound", [("llama3-8b", 0.05),
+                                        ("mixtral-8x7b", 0.05)])
+def test_int8_pool_decode_matches_float_within_quant_noise(arch, bound):
+    """Dense/MoE: one decode step over a quantized pool built from the same
+    prompt KV must produce logits within quantization noise of the float
+    pool (same block table, same write position, int8 kernel end to end)."""
+    from repro.kernels.paged_attention_int8 import quantize_pages
+    cfg32 = dataclasses.replace(get_config(arch).reduced(),
+                                dtype="float32", kv_dtype="float32")
+    params = api.init_params(cfg32, jax.random.PRNGKey(0))
+    prompt = _prompts(cfg32, 1, seed=0, lo=12, hi=13)[0]
+    tok, kp, vp, bt, pos = _prefill_to_pool(cfg32, params, prompt, 64)
+    _, lf, *_ = PD.decode_step_paged(cfg32, params, tok, kp, vp, bt, pos)
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    _, lq, kq2, _, ks2, _ = PD.decode_step_paged(
+        cfg32, params, tok, kq, vq, bt, pos, k_scales=ks, v_scales=vs)
+    assert kq2.dtype == jnp.int8                 # pool stays quantized
+    err = np.abs(np.asarray(lq) - np.asarray(lf))
+    assert err.max() < bound * np.abs(np.asarray(lf)).max()
+
+
+def test_int8_pool_hybrid_decode_matches_float_within_quant_noise():
+    """Hybrid: the int8 path additionally quantizes the RG-LRU state blob
+    (one scale per blob); the step's logits must stay within quantization
+    noise of the float-pool step."""
+    from repro.kernels.paged_attention_int8 import quantize_pages
+    cfg32 = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                                dtype="float32", kv_dtype="float32")
+    params = api.init_params(cfg32, jax.random.PRNGKey(0))
+    prompt = _prompts(cfg32, 1, seed=0, lo=12, hi=13)[0]
+    tok, kp, vp, bt, pos, blob = _prefill_to_pool(cfg32, params, prompt, 64)
+    bslots = jnp.asarray([0], jnp.int32)
+    _, lf, *_ = PD.decode_step_paged_hybrid(cfg32, params, tok, kp, vp,
+                                            blob, bt, bslots, pos)
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    bq, bs = quantize_pages(blob)
+    _, lq, _, _, bq2, _, _, bs2 = PD.decode_step_paged_hybrid(
+        cfg32, params, tok, kq, vq, bq, bt, bslots, pos,
+        k_scales=ks, v_scales=vs, blob_scales=bs)
+    assert bq2.dtype == jnp.int8                 # blob stays quantized
+    err = np.abs(np.asarray(lq) - np.asarray(lf))
+    assert err.max() < 0.08 * np.abs(np.asarray(lf)).max()
+
+
 def test_prefill_bucketed_matches_unpadded(cfg, params):
     """Tail padding must be invisible: same last-token logits and the same
     first true_len KV rows as the unpadded prefill."""
