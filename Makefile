@@ -1,8 +1,10 @@
 PYTHON ?= python
 
-.PHONY: check test test-slow bench-paged serve docs-check
+.PHONY: check test test-slow lint bench-paged bench-latency bench-smoke \
+        bench-check serve docs-check
 
-check: test docs-check
+# lint is CI-gated separately (requires ruff; not in requirements.txt)
+check: test docs-check bench-check
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -11,12 +13,28 @@ test:
 test-slow:
 	PYTHONPATH=src $(PYTHON) -m pytest -q -m slow --runslow
 
+lint:
+	$(PYTHON) -m ruff check .
+
 docs-check:
 	$(PYTHON) tools/check_docs.py
 
 bench-paged:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_kernels
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead
+
+# MTTR / TTFT / goodput under an injected failure, kevlarflow vs standard
+bench-latency:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency
+
+# CI smoke: regenerate bench output in fast modes, then schema-check it
+bench-smoke:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead --fast
+	$(MAKE) bench-check
+
+bench-check:
+	$(PYTHON) tools/check_bench.py
 
 serve:
 	PYTHONPATH=src $(PYTHON) -m repro.serving.server --arch llama3-8b

@@ -12,7 +12,6 @@ contribution (the 'seamless vs partial resume' gap) and shows mechanisms
 """
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import emit, fmt_row
 from repro.core.replication import ReplicationConfig

@@ -108,7 +108,7 @@ def recycling_traffic(arch: str, n_requests: int = 2):
                 if rid >= 0:            # skip the scratch pseudo-request
                     peak_resident = max(peak_resident,
                                         len(inst.pool.table(rid)))
-        if not eng.waiting and not any(i.requests for i in eng.instances):
+        if not eng.has_pending():
             break
     stats = eng.replication_stats()
     page = cfg.page_size
@@ -204,4 +204,10 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: representative RPS points only "
+                         "(the real-engine traffic sections run the same)")
+    main(fast=ap.parse_args().fast)

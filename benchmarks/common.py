@@ -2,8 +2,7 @@
 from __future__ import annotations
 
 import sys
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.system import ServingSystem
 from repro.serving.workload import poisson_workload

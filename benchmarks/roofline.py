@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import glob
 import json
-import sys
 from typing import Dict, List, Optional
 
 from repro.configs import INPUT_SHAPES, get_config

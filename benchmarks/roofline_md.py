@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks.roofline import analyze, load_records, model_flops_per_dev
+from benchmarks.roofline import analyze, load_records
 
 ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 

@@ -2,7 +2,6 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
 from repro.configs import get_config

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.serving.kvcache import PagedKVPool
 

@@ -13,7 +13,7 @@ re-initialization (~10 min: provision + store + communicator + weight load).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.core.cluster import (InstanceState, LoadBalancerGroup, NodeState,
                                 StageSignature, VirtualNode)
@@ -21,7 +21,7 @@ from repro.core.communicator import CommunicatorManager
 from repro.core.failure import FailureEvent
 from repro.core.replication import ReplicationManager
 from repro.core.router import LoadBalancer
-from repro.serving.request import Request, RequestState
+from repro.serving.request import RequestState
 
 MODE_KEVLARFLOW = "kevlarflow"
 MODE_STANDARD = "standard"

@@ -16,7 +16,7 @@ node (i, s) replicates the KV blocks of its in-flight requests to node
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Optional, Set
 
 from repro.core.cluster import LoadBalancerGroup, NodeState, VirtualNode
 

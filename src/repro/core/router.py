@@ -1,36 +1,44 @@
 """Load balancer + dynamic traffic rerouting (paper Sec 3.2 mechanism #2).
 
-Normal operation: requests are distributed evenly (round-robin) across
-serving instances, as in the paper's evaluation setup. Under partial
-failure, *instance-level* rerouting is implicit — a DEGRADED instance keeps
-serving through its patched pipeline — and *request-level* rerouting moves
-work off OFFLINE instances (standard fault behaviour) or pauses it briefly
-during communicator re-form (KevlarFlow)."""
+Normal operation: requests route to the least-loaded instance (queue depth
++ running requests — the same policy ``RealEngine`` applies on the real
+path; ``policy="round_robin"`` keeps the paper-evaluation-setup spread).
+Under partial failure, *instance-level* rerouting is implicit — a DEGRADED
+instance keeps serving through its patched pipeline — and *request-level*
+rerouting moves work off OFFLINE instances (standard fault behaviour) or
+pauses it briefly during communicator re-form (KevlarFlow)."""
 from __future__ import annotations
 
-from collections import deque
-from typing import List, Optional
+from typing import List
 
 from repro.core.cluster import InstanceState, LoadBalancerGroup, PipelineInstance
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 
 
 class LoadBalancer:
-    def __init__(self, group: LoadBalancerGroup):
+    def __init__(self, group: LoadBalancerGroup,
+                 policy: str = "least_loaded"):
+        assert policy in ("least_loaded", "round_robin"), policy
         self.group = group
+        self.policy = policy
         self._rr = 0
 
     def submit(self, req: Request):
-        """Route a new request to a serving instance (round-robin). New
-        traffic avoids RECOVERING instances — they resume their in-flight
-        work after the re-form, but fresh requests go to live pipelines."""
+        """Route a new request to a serving instance. New traffic avoids
+        RECOVERING instances — they resume their in-flight work after the
+        re-form, but fresh requests go to live pipelines."""
         targets = [i for i in self.group.instances
                    if i.state in (InstanceState.HEALTHY, InstanceState.DEGRADED)]
         if not targets:
             targets = [i for i in self.group.instances
                        if i.state == InstanceState.RECOVERING] or self.group.instances
-        inst = targets[self._rr % len(targets)]
-        self._rr += 1
+        if self.policy == "least_loaded":
+            inst = min(targets,
+                       key=lambda i: (len(i.waiting) + len(i.running),
+                                      i.instance_id))
+        else:
+            inst = targets[self._rr % len(targets)]
+            self._rr += 1
         inst.waiting.append(req)
         req.instance_id = inst.instance_id
 

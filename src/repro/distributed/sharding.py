@@ -17,7 +17,7 @@ Layout summary (DESIGN.md; exercised by launch/dryrun.py):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -17,7 +17,6 @@ TPU design (DESIGN.md hardware adaptation):
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -12,9 +12,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 # (no `from __future__` here — it would have to come before the os.environ.)
 
 import argparse
-import functools
 import json
-import re
 import sys
 import time
 import traceback

@@ -14,12 +14,12 @@ cache otherwise.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import encoder, hybrid, moe, ssm, transformer, vlm
 
 _FAMILIES = {

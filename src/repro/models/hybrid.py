@@ -8,7 +8,6 @@ bounded local-attention KV window (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

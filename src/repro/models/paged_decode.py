@@ -20,7 +20,6 @@ Two entry points:
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

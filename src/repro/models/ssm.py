@@ -8,7 +8,6 @@ this family (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

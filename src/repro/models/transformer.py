@@ -7,7 +7,7 @@ Layers are parameter-stacked (leading L axis) and applied with
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

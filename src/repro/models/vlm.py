@@ -9,7 +9,6 @@ entirely in the KV cache after prefill).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -37,11 +37,25 @@ are recycled back to the pool as decode advances
 on the ring peer with a metadata-only retire message — so steady-state
 replication stays ≤ 1 KV block (+ 1 blob on hybrid) per request per step
 and ``promote_replica`` reconstructs exactly the live window.
+
+Dynamic traffic rerouting (paper Sec 3.2 mechanism #2) is the LB layer of
+``RealEngine``: every instance owns a waiting queue, new arrivals route to
+the least-loaded alive instance (queue depth + active slots, never
+round-robin), queued work an instance cannot place flows to any peer with
+headroom, and ``fail_instance`` drains the dead instance's queue onto the
+survivors while in-flight requests resume from promoted replicas. Recovery
+itself is mode-switched (``EngineConfig.recovery``): ``kevlarflow`` brings
+the failed instance back as a warm spare via ``rejoin_instance`` —
+decoupled init means it reuses the node-resident weights AND the shared
+compiled programs, re-entering the LB group and replication ring without
+touching live traffic — while ``standard`` models the classic path: every
+victim restarts and the WHOLE group stalls for ``reload_penalty`` clock
+units of weight reloading before serving resumes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,17 +85,74 @@ class EngineConfig:
     # and replication ships the quantized bytes — roughly half the HBM read
     # per decode step and half the bytes per replication message
     kv_quant: bool = False
+    # recovery policy applied by fail_instance. "kevlarflow": in-flight
+    # requests resume from promoted replicas, the dead instance's queue
+    # reroutes to survivors, and a warm spare rejoins after rejoin_delay
+    # (decoupled init: no weight reload, no recompile). "standard": victims
+    # restart from scratch and the whole LB group stalls for reload_penalty
+    # clock units (full re-init incl. weight load) before serving resumes.
+    recovery: str = "kevlarflow"   # "kevlarflow" | "standard"
+    auto_rejoin: bool = False      # schedule rejoin_instance automatically
+    rejoin_delay: float = 1.0      # kevlarflow spare re-form (clock units)
+    reload_penalty: float = 20.0   # standard full re-init (clock units)
 
 
-class RealInstance:
-    """One serving instance: any paged-family model over a paged KV pool."""
+class FamilyExecutor:
+    """The jit'd prefill + decode programs for one (cfg, EngineConfig) pair.
 
-    def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0):
+    Built ONCE per RealEngine and shared by every instance — including a
+    warm spare rejoining after a failure. This is the compute half of
+    decoupled init: the spare re-enters with the node-resident weights and
+    the already-compiled programs, so rejoining costs neither a weight
+    reload nor a recompile."""
+
+    def __init__(self, cfg, ecfg: EngineConfig):
         if cfg.arch_type not in PD.PAGED_FAMILIES:
             raise ValueError(
                 f"paged serving covers {PD.PAGED_FAMILIES}, not "
                 f"{cfg.arch_type!r} (encoder-only / pure-recurrent families "
                 "are not engine targets)")
+        temp = ecfg.temperature
+        interp = ecfg.interpret
+        quant = ecfg.kv_quant
+        # the int8 pool threads its scale side arrays through the same
+        # signature (None when kv_quant is off — leafless pytree args, so
+        # the jit program is identical to before). Pool buffers are
+        # donated: decode updates pages/scales/blobs in place; donation
+        # indices cover only real buffers.
+        if cfg.arch_type == "hybrid":
+            def _step(p, tok, k_pages, v_pages, ks, vs, blobs, bscales,
+                      bt, bslots, pos, base, rng):
+                return PD.decode_step_paged_hybrid(
+                    cfg, p, tok, k_pages, v_pages, blobs, bt, bslots,
+                    pos, rng, base=base, k_scales=ks, v_scales=vs,
+                    blob_scales=bscales, temperature=temp,
+                    interpret=interp)
+
+            self.decode = jax.jit(
+                _step,
+                donate_argnums=(2, 3, 4, 5, 6, 7) if quant else (2, 3, 6))
+            self.prefill = jax.jit(
+                lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
+        else:
+            def _step(p, tok, k_pages, v_pages, ks, vs, bt, pos, base, rng):
+                return PD.decode_step_paged(
+                    cfg, p, tok, k_pages, v_pages, bt, pos, rng,
+                    base=base, k_scales=ks, v_scales=vs,
+                    temperature=temp, interpret=interp)
+
+            self.decode = jax.jit(
+                _step, donate_argnums=(2, 3, 4, 5) if quant else (2, 3))
+            self.prefill = jax.jit(
+                lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
+
+
+class RealInstance:
+    """One serving instance: any paged-family model over a paged KV pool."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0,
+                 executor: Optional[FamilyExecutor] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.family = cfg.arch_type
         self.params = params          # node-resident weights (shared ref!)
@@ -122,42 +193,20 @@ class RealInstance:
         self.slot_blob = np.full(B, self.scratch_blob, np.int32)
         self.requests: Dict[int, Request] = {}
 
-        temp = ecfg.temperature
-        interp = ecfg.interpret
         # per-instance sampling stream (used only when temperature > 0)
         self._rng = jax.random.PRNGKey(instance_id + 1)
+        # wall clock for request timestamps (None -> caller-supplied ticks)
+        self.clock = clock
+        # compiled programs, shared across the engine's instances (and with
+        # any warm spare that rejoins — see FamilyExecutor)
+        ex = executor or FamilyExecutor(cfg, ecfg)
+        self._decode = ex.decode
+        self._prefill = ex.prefill
 
-        # one step wrapper per family; the int8 pool threads its scale side
-        # arrays through the same signature (None when kv_quant is off —
-        # leafless pytree args, so the jit program is identical to before).
-        # Pool buffers are donated: decode updates pages/scales/blobs in
-        # place. Donation indices cover only real buffers.
-        quant = ecfg.kv_quant
-        if self.family == "hybrid":
-            def _step(p, tok, k_pages, v_pages, ks, vs, blobs, bscales,
-                      bt, bslots, pos, base, rng):
-                return PD.decode_step_paged_hybrid(
-                    cfg, p, tok, k_pages, v_pages, blobs, bt, bslots,
-                    pos, rng, base=base, k_scales=ks, v_scales=vs,
-                    blob_scales=bscales, temperature=temp,
-                    interpret=interp)
-
-            self._decode = jax.jit(
-                _step,
-                donate_argnums=(2, 3, 4, 5, 6, 7) if quant else (2, 3, 6))
-            self._prefill = jax.jit(
-                lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
-        else:
-            def _step(p, tok, k_pages, v_pages, ks, vs, bt, pos, base, rng):
-                return PD.decode_step_paged(
-                    cfg, p, tok, k_pages, v_pages, bt, pos, rng,
-                    base=base, k_scales=ks, v_scales=vs,
-                    temperature=temp, interpret=interp)
-
-            self._decode = jax.jit(
-                _step, donate_argnums=(2, 3, 4, 5) if quant else (2, 3))
-            self._prefill = jax.jit(
-                lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
+    def _stamp(self, now: float) -> float:
+        """Timestamp an event: fresh wall-clock reading when a clock is
+        wired (admission/prefill take real time), else the caller's tick."""
+        return self.clock() if self.clock is not None else now
 
     # -- admission -----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -204,6 +253,7 @@ class RealInstance:
             refs = self._allocate(req.rid, n)   # full pool costs no compute
         except MemoryError:
             return False
+        req.admit_time = self._stamp(now)       # prefill starts now
         bucket = PD.next_bucket(n, lo=self.pool.page_size)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt_tokens
@@ -236,8 +286,11 @@ class RealInstance:
         req.output_tokens = [int(first[0])]
         req.generated = 1
         req.state = RequestState.DECODE
+        req.instance_id = self.instance_id
         if req.first_token_time < 0:
-            req.first_token_time = now
+            # the prefill above produced the first token — stamp AFTER it
+            # (so first_token_time - admit_time is the prefill cost)
+            req.first_token_time = self._stamp(now)
         self.slot_rid[slot] = req.rid
         self.slot_pos[slot] = n
         self.requests[req.rid] = req
@@ -321,7 +374,7 @@ class RealInstance:
             if req.generated >= req.max_new_tokens or \
                     self.slot_pos[i] >= self.ecfg.max_seq - 1:
                 req.state = RequestState.DONE
-                req.finish_time = now
+                req.finish_time = self._stamp(now)
                 finished.append(req)
                 self.release(req.rid)
         return finished
@@ -390,6 +443,7 @@ class RealInstance:
         self.slot_pos[slot] = total
         req.output_tokens = list(meta["tokens"])
         req.state = RequestState.DECODE
+        req.instance_id = self.instance_id
         req.n_migrations += 1
         self.slot_rid[slot] = req.rid
         self.requests[req.rid] = req
@@ -398,26 +452,53 @@ class RealInstance:
     def fail(self):
         self.alive = False
         self.pending_retires.clear()   # a dead primary sends no retires
+        # a dead instance holds no requests (its memory is lost) — the
+        # engine captures the victims first; leaving them here would keep
+        # has_pending() true forever and hang drain()
+        self.requests = {}
 
 
 class RealEngine:
-    """LB group of RealInstances with ring block-delta replication + failover."""
+    """LB group of RealInstances with ring block-delta replication, dynamic
+    traffic rerouting, and mode-switched failover/recovery."""
 
     def __init__(self, cfg, ecfg: Optional[EngineConfig] = None,
-                 n_instances: int = 2, seed: int = 0):
+                 n_instances: int = 2, seed: int = 0,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
+        # monotonic engine time: ticks (one per step) by default, or the
+        # injected wall clock (EngineService passes time.time so request
+        # timestamps — arrival/TTFT/latency — share one timebase)
+        self.clock = clock
         # decoupled init: ONE weight materialization shared by all replicas
-        # (every node "holds the same portion of model weights")
+        # (every node "holds the same portion of model weights") and ONE set
+        # of compiled programs shared by all instances + rejoining spares
         self.params = api.init_params(cfg, jax.random.PRNGKey(seed))
-        self.instances = [RealInstance(cfg, self.params, self.ecfg, i)
-                          for i in range(n_instances)]
+        self.executor = FamilyExecutor(cfg, self.ecfg)
+        self.instances = [
+            RealInstance(cfg, self.params, self.ecfg, i,
+                         executor=self.executor, clock=clock)
+            for i in range(n_instances)]
         # rid -> {"peer", "home", "pos", "tokens"} (tiny host-side metadata;
         # the KV payload lives in the target pool's hosted replica blocks)
         self.replica_meta: Dict[int, dict] = {}
+        # arrivals not yet routed (normally drained every step; holds work
+        # only while NO instance is alive)
         self.waiting: List[Request] = []
+        # dynamic traffic rerouting: per-instance waiting queues, fed by
+        # least-loaded routing and drained/requeued on failure
+        self.queues: Dict[int, List[Request]] = {
+            i: [] for i in range(n_instances)}
         self.done: List[Request] = []
-        self.t = 0.0
+        self.t = self.clock() if self.clock is not None else 0.0
+        # standard-recovery stall: until this time the WHOLE group is down
+        # reloading weights (the classic fault path KevlarFlow removes)
+        self.stall_until = -1.0
+        # (instance_id, ready_at) warm spares waiting to rejoin
+        self._pending_rejoins: List[tuple] = []
+        # one dict per fail_instance call; "mttr" lands at rejoin time
+        self.failure_events: List[dict] = []
         # replication traffic accounting (bench_overhead reads these)
         self.repl_blocks_total = 0
         self.repl_blobs_total = 0
@@ -431,6 +512,45 @@ class RealEngine:
     def submit(self, req: Request):
         self.waiting.append(req)
 
+    # -- dynamic traffic rerouting (LB) ---------------------------------------
+    def _load(self, inst: RealInstance) -> int:
+        """Instance load as the LB sees it: active slots + queued depth."""
+        return len(inst.requests) + len(self.queues[inst.instance_id])
+
+    def _route(self, req: Request, front: bool = False):
+        """Queue-depth-aware admission: place the request on the least-
+        loaded ALIVE instance's queue (front=True preserves the position of
+        requeued work ahead of later arrivals)."""
+        alive = [i for i in self.instances if i.alive]
+        if not alive:
+            # nobody to serve it — park in the arrival buffer; the next
+            # rejoin re-routes it
+            self.waiting.insert(0, req) if front else self.waiting.append(req)
+            return
+        tgt = min(alive, key=lambda i: (self._load(i), i.instance_id))
+        req.instance_id = tgt.instance_id
+        q = self.queues[tgt.instance_id]
+        q.insert(0, req) if front else q.append(req)
+
+    def queued_requests(self) -> List[Request]:
+        """Requests routed to an instance but not yet admitted."""
+        return [r for q in self.queues.values() for r in q]
+
+    def has_pending(self) -> bool:
+        """True while any request is waiting, queued, or in flight."""
+        return bool(self.waiting) or \
+            any(self.queues.values()) or \
+            any(i.requests for i in self.instances)
+
+    def queue_depth(self) -> int:
+        return len(self.waiting) + sum(len(q) for q in self.queues.values())
+
+    def recovery_pending(self) -> bool:
+        """True while a spare is waiting to rejoin or the group is inside a
+        standard-mode reload stall — step() must keep running through idle
+        periods so recovery completes without traffic."""
+        return bool(self._pending_rejoins) or self.t < self.stall_until
+
     def _ring_target(self, instance_id: int) -> int:
         alive = [i.instance_id for i in self.instances if i.alive]
         if len(alive) < 2:
@@ -440,25 +560,47 @@ class RealEngine:
             idx = (idx + 1) % len(self.instances)
         return idx
 
-    def step(self):
-        """One engine iteration: admit, decode everywhere, replicate deltas."""
-        self.t += 1.0
+    def step(self) -> int:
+        """One engine iteration: rejoin due spares, route + admit, decode
+        everywhere, replicate deltas. Returns the number of requests that
+        made forward progress (0 while stalled or idle — the service loop
+        backs off instead of spinning)."""
+        self.t = self.clock() if self.clock is not None else self.t + 1.0
+        for iid, ready in list(self._pending_rejoins):
+            if self.t >= ready:
+                if self.instances[iid].alive:   # e.g. manual admin rejoin
+                    self._pending_rejoins.remove((iid, ready))
+                else:
+                    self.rejoin_instance(iid)
+        if self.t < self.stall_until:
+            return 0       # standard recovery: group-wide weight reload
         alive = [i for i in self.instances if i.alive]
-        # least-loaded admission: try every alive instance (an instance can
-        # have free slots but a full pool — others may still admit)
+        # rerouting part 1: arrivals go to the least-loaded alive instance
         while self.waiting and alive:
-            admitted = False
-            for target in sorted(alive, key=lambda i: len(i.free_slots()),
-                                 reverse=True):
-                if target.free_slots() and \
-                        target.admit(self.waiting[0], self.t):
-                    self.waiting.pop(0)
-                    admitted = True
-                    break
-            if not admitted:
-                break
+            self._route(self.waiting.pop(0))
+        # each instance admits from its OWN queue...
+        progressed = 0
+        for inst in alive:
+            q = self.queues[inst.instance_id]
+            while q and inst.free_slots() and inst.admit(q[0], self.t):
+                q.pop(0)
+                progressed += 1
+        # ...then (rerouting part 2) queued work an instance cannot place —
+        # full pool, busy slots — flows to any peer with headroom: an
+        # instance can have free slots but a full pool, and vice versa
+        for inst in alive:
+            q = self.queues[inst.instance_id]
+            if not q:
+                continue
+            for other in sorted(alive, key=self._load):
+                if other is inst:
+                    continue
+                while q and other.free_slots() and other.admit(q[0], self.t):
+                    q.pop(0)
+                    progressed += 1
         for inst in alive:
             self.active_request_steps += len(inst.requests)
+            progressed += len(inst.requests)
             finished = inst.step(self.t)
             # retire hosted replicas of pages the primary recycled this
             # step — BEFORE the delta pass, so replica tables mirror the
@@ -476,6 +618,7 @@ class RealEngine:
         if self.ecfg.replicate:
             self._replicate()
             self.repl_steps += 1
+        return progressed
 
     def _drop_replica_of(self, rid: int):
         meta = self.replica_meta.pop(rid, None)
@@ -501,6 +644,14 @@ class RealEngine:
             blob_src: List[int] = []
             blob_dst: List[int] = []
             for rid, req in inst.requests.items():
+                # the ring target can change (failure, spare rejoin): drop
+                # the replica still hosted on the PREVIOUS home, or its
+                # blocks leak for the request's lifetime
+                meta = self.replica_meta.get(rid)
+                if meta is not None and meta["home"] != tgt_id and \
+                        self.instances[meta["home"]].alive:
+                    self.instances[meta["home"]].pool.drop_replica(
+                        meta["peer"], rid)
                 table = inst.pool.table(rid)
                 rtab = tgt.pool.replica_table(inst.instance_id, rid)
                 # retires keep the hosted table in lockstep with the live
@@ -573,28 +724,60 @@ class RealEngine:
         }
 
     def fail_instance(self, instance_id: int) -> List[int]:
-        """Kill an instance; failover its requests by promoting the replica
-        blocks already hosted on the ring target. Returns the rids that
-        resumed seamlessly."""
+        """Kill an instance and run the configured recovery policy.
+
+        kevlarflow: in-flight requests resume from the replica blocks
+        already hosted on the ring target (``promote_replica``), the dead
+        instance's WAITING QUEUE drains onto the survivors (dynamic traffic
+        rerouting — new arrivals and queued work keep flowing), and a warm
+        spare is scheduled to rejoin after ``rejoin_delay``.
+
+        standard: no replicas to promote — every victim restarts from
+        scratch, and the whole group stalls for ``reload_penalty`` clock
+        units (the classic full re-init with weight reload).
+
+        Returns the rids that resumed seamlessly."""
         inst = self.instances[instance_id]
+        if not inst.alive:
+            return []      # already dead: idempotent (e.g. an HTTP retry) —
+            #                re-processing would restart requests that now
+            #                live on survivors and double-schedule the rejoin
+        if self.clock is not None:
+            # callable from outside the step loop (HTTP admin thread): the
+            # last step's stamp may be stale on an idle engine, and the
+            # stall/rejoin deadlines anchor on failure time
+            self.t = self.clock()
+        standard = self.ecfg.recovery == "standard"
         victims = list(inst.requests.values())
+        drained = self.queues[instance_id]
+        self.queues[instance_id] = []
         inst.fail()
+        event = {"instance": instance_id, "mode": self.ecfg.recovery,
+                 "t_fail": self.t, "n_victims": len(victims),
+                 "requeued": len(drained), "resumed": 0, "restarted": 0,
+                 "t_rejoin": -1.0, "mttr": -1.0}
+        self.failure_events.append(event)
         resumed = []
         for req in victims:
             meta = self.replica_meta.pop(req.rid, None)
             target = None
             if meta is not None and self.instances[meta["home"]].alive:
                 target = self.instances[meta["home"]]
-            if target is not None and \
+            if not standard and target is not None and \
                     target.adopt_replica(meta["peer"], req, meta):
                 resumed.append(req.rid)
+                event["resumed"] += 1
             else:
-                if meta is not None and self.instances[meta["home"]].alive:
-                    self.instances[meta["home"]].pool.drop_replica(
-                        meta["peer"], req.rid)
+                if target is not None:
+                    target.pool.drop_replica(meta["peer"], req.rid)
                 req.restart()
                 req.state = RequestState.QUEUED
-                self.waiting.insert(0, req)
+                event["restarted"] += 1
+                self._route(req, front=True)
+        # the dead instance's queued (never-admitted) work reroutes to the
+        # survivors behind the restarted victims, ahead of future arrivals
+        for req in drained:
+            self._route(req)
         # replicas the dead instance hosted for others are gone: mark those
         # primaries dirty so the next pass re-replicates to a new target
         for other in self.instances:
@@ -607,11 +790,49 @@ class RealEngine:
                     for ref in other.pool.table(rid):
                         ref.replicated = False
                     other.pool.mark_blob_dirty(rid)
+        if standard:
+            # classic fault path: the group re-initializes together —
+            # nothing serves until the weights are back
+            self.stall_until = self.t + self.ecfg.reload_penalty
+        if self.ecfg.auto_rejoin:
+            delay = self.ecfg.reload_penalty if standard \
+                else self.ecfg.rejoin_delay
+            self._pending_rejoins.append((instance_id, self.t + delay))
         return resumed
 
+    def rejoin_instance(self, instance_id: int) -> RealInstance:
+        """Warm-spare rejoin (decoupled init, paper Sec 3.2 mechanism #1):
+        rebuild the failed instance around the node-resident weights and the
+        engine's shared compiled programs — no weight reload, no recompile —
+        and re-enter the LB group and the replication ring. Live traffic on
+        the survivors is untouched; the next ``_replicate`` pass re-hosts
+        against the new ring topology."""
+        if self.instances[instance_id].alive:
+            raise ValueError(f"instance {instance_id} is alive")
+        if self.clock is not None:
+            self.t = self.clock()       # admin-thread call: stamp MTTR now
+        self._pending_rejoins = [(i, t) for i, t in self._pending_rejoins
+                                 if i != instance_id]
+        inst = RealInstance(self.cfg, self.params, self.ecfg, instance_id,
+                            executor=self.executor, clock=self.clock)
+        self.instances[instance_id] = inst
+        self.queues[instance_id] = []
+        for event in reversed(self.failure_events):
+            if event["instance"] == instance_id and event["t_rejoin"] < 0:
+                event["t_rejoin"] = self.t
+                event["mttr"] = self.t - event["t_fail"]
+                break
+        # parked arrivals (possible while NO instance was alive) flow again
+        while self.waiting:
+            self._route(self.waiting.pop(0))
+        return inst
+
+    def mttr_events(self) -> List[dict]:
+        """Completed failure->rejoin cycles (mttr in engine clock units)."""
+        return [e for e in self.failure_events if e["mttr"] >= 0]
+
     def run(self, max_iters: int = 1000):
-        while (self.waiting or any(i.requests for i in self.instances)) \
-                and max_iters > 0:
+        while self.has_pending() and max_iters > 0:
             self.step()
             max_iters -= 1
         return self.done

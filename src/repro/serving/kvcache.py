@@ -14,7 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 try:  # real-buffer mode is optional (sim benchmarks never touch jax)
     import jax

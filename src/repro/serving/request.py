@@ -28,6 +28,7 @@ class Request:
     instance_id: Optional[int] = None
 
     # metrics (absolute times; -1 = not yet)
+    admit_time: float = -1.0                    # prefill started (last admit)
     first_token_time: float = -1.0
     finish_time: float = -1.0
     n_retries: int = 0
@@ -65,11 +66,27 @@ class Request:
         self.replicated_through = 0
         if self.output_tokens:
             self.output_tokens.clear()
+        self.admit_time = -1.0
         self.first_token_time = -1.0    # paper: queue spike re-inflates TTFT
 
+    def timing(self) -> dict:
+        """Wire-format timing block (served by the HTTP layer and the
+        latency bench): absolute stamps plus the derived TTFT/latency."""
+        return {
+            "arrival_time": self.arrival_time,
+            "admit_time": self.admit_time,
+            "first_token_time": self.first_token_time,
+            "finish_time": self.finish_time,
+            "ttft": self.ttft if self.first_token_time >= 0 else -1.0,
+            "latency": self.latency if self.finish_time >= 0 else -1.0,
+        }
 
-def summarize(requests: List[Request]):
-    """Aggregate metrics over completed requests (paper Table 1 columns)."""
+
+def summarize(requests: List[Request], span: Optional[float] = None):
+    """Aggregate metrics over completed requests (paper Table 1 columns).
+
+    ``span`` (clock units covered by the run) additionally yields goodput:
+    completed requests/s and generated tokens/s over the span."""
     import numpy as np
 
     done = [r for r in requests if r.state == RequestState.DONE]
@@ -78,7 +95,7 @@ def summarize(requests: List[Request]):
     lat = np.array([r.latency for r in done])
     ttft = np.array([r.ttft for r in done if r.first_token_time >= 0])
     tpot = np.array([(r.latency - r.ttft) / max(r.generated, 1) for r in done])
-    return {
+    out = {
         "n": len(done),
         "latency_avg": float(lat.mean()),
         "latency_p99": float(np.percentile(lat, 99)),
@@ -89,3 +106,7 @@ def summarize(requests: List[Request]):
         "retries": sum(r.n_retries for r in requests),
         "migrations": sum(r.n_migrations for r in requests),
     }
+    if span is not None and span > 0:
+        out["goodput_req_s"] = len(done) / span
+        out["goodput_tok_s"] = sum(r.generated for r in done) / span
+    return out

@@ -15,36 +15,49 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.serving.engine import EngineConfig, RealEngine
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 
 
 class EngineService:
-    """Background continuous-batching loop around RealEngine."""
+    """Background continuous-batching loop around RealEngine.
+
+    The engine runs on the WALL clock (``clock=time.time``), so request
+    timestamps — arrival, admit, first token, completion — live on one
+    timebase and the HTTP layer (and the latency bench) can report real
+    TTFT/latency seconds."""
 
     def __init__(self, cfg, ecfg: EngineConfig, n_instances: int = 2):
-        self.engine = RealEngine(cfg, ecfg, n_instances=n_instances)
+        self.engine = RealEngine(cfg, ecfg, n_instances=n_instances,
+                                 clock=time.time)
         self.cfg = cfg
         self._lock = threading.Lock()
         self._next_rid = 0
         self._events: dict[int, threading.Event] = {}
+        self._n_signaled = 0            # engine.done prefix already signaled
         self._stop = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     def _loop(self):
         while not self._stop:
+            progressed = 0
             with self._lock:
-                busy = (self.engine.waiting or
-                        any(i.requests for i in self.engine.instances))
-                if busy:
-                    self.engine.step()
-                done_ids = [r.rid for r in self.engine.done]
-            for rid in done_ids:
-                ev = self._events.get(rid)
+                if self.engine.has_pending() or \
+                        self.engine.recovery_pending():
+                    progressed = self.engine.step()
+                # signal only completions NEW since the last pass — the old
+                # loop re-scanned (and re-set events for) the entire done
+                # list on every idle iteration
+                new_done = self.engine.done[self._n_signaled:]
+                self._n_signaled = len(self.engine.done)
+            for req in new_done:
+                ev = self._events.get(req.rid)
                 if ev:
                     ev.set()
-            if not busy:
-                time.sleep(0.01)
+            if not progressed:
+                # idle, or stalled on a standard-mode weight reload: back
+                # off instead of spinning with the lock held
+                time.sleep(0.002 if self.engine.has_pending() else 0.01)
 
     def submit(self, prompt_tokens, max_tokens: int) -> Request:
         with self._lock:
@@ -60,22 +73,50 @@ class EngineService:
     def wait(self, req: Request, timeout: float = 120.0) -> bool:
         return self._events[req.rid].wait(timeout)
 
+    def drain(self, timeout: float = 300.0) -> bool:
+        """Block until every submitted request has completed — used by the
+        server's clean shutdown and by the latency bench to close a run."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._lock:
+                if not self.engine.has_pending():
+                    return True
+            time.sleep(0.005)
+        return False
+
     def fail_instance(self, instance_id: int):
         with self._lock:
             return self.engine.fail_instance(instance_id)
 
+    def fail_instance_if_busy(self, instance_id: int):
+        """Atomically kill the instance IFF it has in-flight requests —
+        failure drills use this to guarantee the kill lands on a serving
+        instance. Returns the resumed rids, or None if it was idle."""
+        with self._lock:
+            if not self.engine.instances[instance_id].requests:
+                return None
+            return self.engine.fail_instance(instance_id)
+
+    def rejoin_instance(self, instance_id: int):
+        with self._lock:
+            self.engine.rejoin_instance(instance_id)
+
     def stats(self):
         with self._lock:
+            eng = self.engine
             return {
                 "instances": [
                     {"id": i.instance_id, "alive": i.alive,
                      "active": len(i.requests),
+                     "queued": len(eng.queues[i.instance_id]),
                      "pool_used_blocks": i.pool.n_used,
                      "pool_replica_blocks": i.pool.replica_blocks_used()}
-                    for i in self.engine.instances],
-                "queued": len(self.engine.waiting),
-                "completed": len(self.engine.done),
-                "replication": self.engine.replication_stats(),
+                    for i in eng.instances],
+                "queued": eng.queue_depth(),
+                "completed": len(eng.done),
+                "recovery_mode": eng.ecfg.recovery,
+                "failure_events": [dict(e) for e in eng.failure_events],
+                "replication": eng.replication_stats(),
             }
 
     def shutdown(self):
@@ -132,6 +173,7 @@ def make_handler(svc: EngineService):
                         "prompt_tokens": req.prompt_len,
                         "completion_tokens": len(req.output_tokens or []),
                     },
+                    "timing": req.timing(),
                     "kevlarflow": {"migrations": req.n_migrations,
                                    "retries": req.n_retries},
                 })
@@ -140,6 +182,14 @@ def make_handler(svc: EngineService):
                 resumed = svc.fail_instance(iid)
                 self._json(200, {"failed_instance": iid,
                                  "seamlessly_resumed": resumed})
+            elif self.path == "/admin/rejoin_instance":
+                iid = int(payload.get("instance", 0))
+                try:
+                    svc.rejoin_instance(iid)
+                except ValueError as e:
+                    self._json(409, {"error": str(e)})
+                    return
+                self._json(200, {"rejoined_instance": iid})
             else:
                 self._json(404, {"error": "not found"})
 
@@ -161,6 +211,17 @@ def main():
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV pool: quantized pages + scales, int8 "
                          "decode kernel, ~2x smaller replication messages")
+    ap.add_argument("--recovery", default="kevlarflow",
+                    choices=["kevlarflow", "standard"],
+                    help="fail_instance policy: promote replicas + reroute "
+                         "+ warm-spare rejoin, or restart + group-wide "
+                         "weight-reload stall")
+    ap.add_argument("--auto-rejoin", action="store_true",
+                    help="bring a failed instance back automatically (warm "
+                         "spare after --rejoin-delay s; standard mode after "
+                         "--reload-penalty s)")
+    ap.add_argument("--rejoin-delay", type=float, default=1.0)
+    ap.add_argument("--reload-penalty", type=float, default=20.0)
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if cfg.n_params() > 3e8:
@@ -168,13 +229,19 @@ def main():
         cfg = cfg.reduced()
     # sliding-window archs serve any max_seq (block recycling keeps only
     # the attention window resident) — no capping needed
-    ecfg = EngineConfig(kv_quant=args.kv_quant)
+    ecfg = EngineConfig(kv_quant=args.kv_quant, recovery=args.recovery,
+                        auto_rejoin=args.auto_rejoin,
+                        rejoin_delay=args.rejoin_delay,
+                        reload_penalty=args.reload_penalty,
+                        replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "
-          f"({args.instances} instances). POST /v1/completions")
+          f"({args.instances} instances, {args.recovery} recovery). "
+          f"POST /v1/completions")
     try:
         httpd.serve_forever()
     finally:
+        svc.drain(timeout=30.0)     # let in-flight generations finish
         svc.shutdown()
 
 

@@ -7,7 +7,7 @@ reproduces the paper's Sec 4.1 numbers with TPOT 163 ms: avg latency ~64-68 s
 tokens at p99), TTFT ~0.2 s at low load."""
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
@@ -17,24 +17,34 @@ PROMPT_MEAN, PROMPT_SIGMA = 220.0, 0.6
 OUTPUT_MEAN, OUTPUT_SIGMA = 400.0, 0.4
 
 
-def sharegpt_lengths(rng: np.random.Generator, n: int):
-    prompt = rng.lognormal(np.log(PROMPT_MEAN) - PROMPT_SIGMA ** 2 / 2,
+def sharegpt_lengths(rng: np.random.Generator, n: int, *,
+                     prompt_mean: float = PROMPT_MEAN,
+                     output_mean: float = OUTPUT_MEAN,
+                     min_prompt: int = 8, max_prompt: int = 2048,
+                     min_output: int = 10, max_output: int = 2048):
+    """ShareGPT-shaped lognormal lengths. The mean/clip knobs let the REAL
+    engine replay the same distribution scaled down to CPU-feasible sizes
+    (benchmarks/bench_latency.py) while the sim path keeps the calibrated
+    paper defaults."""
+    prompt = rng.lognormal(np.log(prompt_mean) - PROMPT_SIGMA ** 2 / 2,
                            PROMPT_SIGMA, n)
-    output = rng.lognormal(np.log(OUTPUT_MEAN) - OUTPUT_SIGMA ** 2 / 2,
+    output = rng.lognormal(np.log(output_mean) - OUTPUT_SIGMA ** 2 / 2,
                            OUTPUT_SIGMA, n)
-    return (np.clip(prompt, 8, 2048).astype(int),
-            np.clip(output, 10, 2048).astype(int))
+    return (np.clip(prompt, min_prompt, max_prompt).astype(int),
+            np.clip(output, min_output, max_output).astype(int))
 
 
 def poisson_workload(rps: float, duration: float, seed: int = 0,
-                     start: float = 0.0, rid_base: int = 0) -> List[Request]:
-    """Poisson arrivals over [start, start+duration) at the given RPS."""
+                     start: float = 0.0, rid_base: int = 0,
+                     **length_kw) -> List[Request]:
+    """Poisson arrivals over [start, start+duration) at the given RPS.
+    ``length_kw`` forwards to :func:`sharegpt_lengths`."""
     rng = np.random.default_rng(seed)
     n_expected = int(rps * duration * 1.5 + 64)
     gaps = rng.exponential(1.0 / rps, n_expected)
     times = start + np.cumsum(gaps)
     times = times[times < start + duration]
-    prompts, outputs = sharegpt_lengths(rng, len(times))
+    prompts, outputs = sharegpt_lengths(rng, len(times), **length_kw)
     return [
         Request(rid=rid_base + i, prompt_len=int(p), max_new_tokens=int(o),
                 arrival_time=float(t))

@@ -5,7 +5,7 @@ natural text rather than uniform noise."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

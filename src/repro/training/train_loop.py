@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,111 @@
+"""tools/check_bench.py: the bench-smoke CI gate must catch rotted bench
+output — missing sections, non-finite metrics, and regressions of the
+paper's kevlarflow-beats-standard ordering."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "tools", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def _mode(mttr, ttft_p99=0.5):
+    return {"n": 10, "mttr": mttr, "latency_avg": 1.0, "latency_p99": 2.0,
+            "ttft_avg": 0.2, "ttft_p99": ttft_p99, "goodput_req_s": 3.0,
+            "goodput_tok_s": 40.0}
+
+
+def _valid_latency():
+    fams = {}
+    for fam in ("dense", "moe", "hybrid"):
+        fams[fam] = {"arch": fam,
+                     "kevlarflow": _mode(0.2, ttft_p99=0.4),
+                     "standard": _mode(4.0, ttft_p99=1.6),
+                     "ratios": {"mttr_x": 20.0}}
+    return {"meta": {"profile": "tiny"}, "families": fams}
+
+
+def _check(tmp_path, payload):
+    path = tmp_path / "BENCH_latency.json"
+    path.write_text(json.dumps(payload))
+    problems = []
+    check_bench.check_latency(str(path), problems)
+    return problems
+
+
+def test_valid_latency_passes(tmp_path):
+    assert _check(tmp_path, _valid_latency()) == []
+
+
+def test_missing_family_flagged(tmp_path):
+    payload = _valid_latency()
+    del payload["families"]["hybrid"]
+    assert any("hybrid" in p for p in _check(tmp_path, payload))
+
+
+def test_missing_metric_flagged(tmp_path):
+    payload = _valid_latency()
+    del payload["families"]["moe"]["standard"]["ttft_p99"]
+    assert any("ttft_p99" in p for p in _check(tmp_path, payload))
+
+
+def test_non_finite_metric_flagged(tmp_path):
+    payload = _valid_latency()
+    payload["families"]["dense"]["kevlarflow"]["mttr"] = float("nan")
+    assert any("mttr" in p for p in _check(tmp_path, payload))
+
+
+def test_unmeasured_negative_metric_flagged(tmp_path):
+    payload = _valid_latency()
+    payload["families"]["dense"]["kevlarflow"]["mttr"] = -1.0
+    assert any("unmeasured" in p for p in _check(tmp_path, payload))
+
+
+def test_kevlarflow_regression_flagged(tmp_path):
+    """The acceptance ordering is gated: kevlarflow not strictly better on
+    MTTR or p99 TTFT turns bench-check red."""
+    payload = _valid_latency()
+    payload["families"]["moe"]["kevlarflow"]["mttr"] = 9.0   # worse than 4.0
+    problems = _check(tmp_path, payload)
+    assert any("not strictly better" in p and "mttr" in p for p in problems)
+    payload = _valid_latency()
+    payload["families"]["dense"]["kevlarflow"]["ttft_p99"] = 1.6  # tie
+    problems = _check(tmp_path, payload)
+    assert any("ttft_p99" in p for p in problems)
+
+
+def test_zero_completions_flagged(tmp_path):
+    payload = _valid_latency()
+    payload["families"]["dense"]["standard"]["n"] = 0
+    assert any("0 requests" in p for p in _check(tmp_path, payload))
+
+
+def test_missing_file_flagged(tmp_path):
+    problems = []
+    check_bench.check_latency(str(tmp_path / "nope.json"), problems)
+    assert problems
+
+
+def test_repo_bench_paged_passes():
+    """The committed BENCH_paged.json must satisfy its own schema."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    problems = []
+    check_bench.check_paged(os.path.join(root, "BENCH_paged.json"), problems)
+    assert problems == [], problems
+
+
+def test_repo_bench_latency_passes():
+    """The committed BENCH_latency.json (full profile, all families) must
+    satisfy the schema AND the kevlarflow-beats-standard ordering."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    path = os.path.join(root, "BENCH_latency.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_latency.json not generated yet")
+    problems = []
+    check_bench.check_latency(path, problems)
+    assert problems == [], problems

@@ -296,8 +296,7 @@ def _run_windowed(cfg, max_seq, out, fail_at=None, n_req=4, prompt=10,
     for r in reqs:
         eng.submit(r)
     steps = peak = 0
-    while (eng.waiting or any(i.requests for i in eng.instances)) \
-            and steps < 2000:
+    while eng.has_pending() and steps < 2000:
         eng.step()
         steps += 1
         for inst in eng.instances:

@@ -1,5 +1,4 @@
 """Background KV replication semantics (paper Sec 3.2 mechanism #3)."""
-import pytest
 
 from repro.core.cluster import build_group
 from repro.core.replication import ReplicationConfig, ReplicationManager

@@ -1,0 +1,254 @@
+"""Dynamic traffic rerouting + mode-switched recovery on the real engine:
+least-loaded admission, queue drain/requeue on failure, warm-spare rejoin
+(decoupled init), and the standard-baseline group stall."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3-8b").reduced()
+
+
+def _reqs(cfg, n, seed=0, prompt=8, out=16, rid_base=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid_base + i, prompt_len=prompt, max_new_tokens=out,
+                    arrival_time=0.0,
+                    prompt_tokens=rng.integers(1, cfg.vocab_size,
+                                               prompt).tolist())
+            for i in range(n)]
+
+
+def test_least_loaded_routing_spreads_arrivals(cfg):
+    """Arrivals split evenly across idle instances (queue-depth-aware, not
+    first-fit): with 2 instances and 6 requests, each gets 3."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       replicate=False), n_instances=2)
+    for r in _reqs(cfg, 6):
+        eng.submit(r)
+    eng.step()
+    per_inst = [len(i.requests) for i in eng.instances]
+    assert per_inst == [3, 3], per_inst
+    assert all(r.instance_id is not None for r in eng.done + [
+        req for i in eng.instances for req in i.requests.values()])
+    eng.run(200)
+    assert len(eng.done) == 6
+
+
+def test_queued_work_flows_to_peer_with_headroom(cfg):
+    """A request queued on an instance that cannot admit it (busy slots)
+    reroutes to a peer with free slots instead of waiting."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=2, max_seq=64,
+                                       replicate=False), n_instances=2)
+    # 5 requests > 2x2 slots: one stays queued after the first step
+    for r in _reqs(cfg, 5, out=30):
+        eng.submit(r)
+    eng.step()
+    assert sum(len(i.requests) for i in eng.instances) == 4
+    assert len(eng.queued_requests()) == 1
+    # as soon as ANY instance frees a slot the queued request lands there —
+    # run to completion and verify nothing starved
+    eng.run(400)
+    assert len(eng.done) == 5
+
+
+def test_fail_instance_drains_queue_to_survivors(cfg):
+    """The dead instance's waiting queue reroutes to survivors: queued
+    requests never wait for the spare, and they complete with zero retries
+    (they had not started — nothing to lose)."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=2, max_seq=64),
+                     n_instances=2, seed=0)
+    for r in _reqs(cfg, 8, out=20):       # 8 > 4 slots: queues build
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    dead_q = list(eng.queues[0])
+    assert dead_q, "test needs queued work on the victim instance"
+    eng.fail_instance(0)
+    assert eng.queues[0] == []
+    survivors_q = eng.queued_requests()
+    assert all(r in survivors_q or r.state.value != "queued"
+               for r in dead_q)
+    assert eng.failure_events[0]["requeued"] == len(dead_q)
+    eng.run(600)
+    assert len(eng.done) == 8
+    assert all(r.n_retries == 0 for r in dead_q)
+
+
+def test_warm_spare_rejoin_serves_new_traffic(cfg):
+    """kevlarflow recovery: the failed instance rejoins after rejoin_delay
+    as a warm spare (shared weights + shared compiled programs — decoupled
+    init) and picks up new arrivals; MTTR is the rejoin delay."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       auto_rejoin=True, rejoin_delay=3.0),
+                     n_instances=2, seed=0)
+    for r in _reqs(cfg, 4, out=30):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    eng.fail_instance(0)
+    assert not eng.instances[0].alive
+    for _ in range(5):                    # crosses rejoin_delay=3 ticks
+        eng.step()
+    spare = eng.instances[0]
+    assert spare.alive
+    # decoupled init: the spare holds the SAME weight refs and the SAME
+    # compiled programs as the survivors — nothing was reloaded
+    assert spare.params is eng.params
+    assert spare._decode is eng.instances[1]._decode
+    assert spare._prefill is eng.instances[1]._prefill
+    events = eng.mttr_events()
+    assert len(events) == 1
+    assert events[0]["mttr"] == pytest.approx(3.0, abs=1.01)
+    late = _reqs(cfg, 2, out=10, rid_base=100)
+    for r in late:
+        eng.submit(r)
+    eng.step()
+    assert len(spare.requests) == 2       # least-loaded: both go to the spare
+    eng.run(400)
+    assert len(eng.done) == 6
+
+
+def test_rejoined_spare_reenters_replication_ring(cfg):
+    """After a kill + rejoin, the ring re-forms over the spare: killing the
+    SURVIVOR next must fail over byte-identically onto the rejoined spare."""
+    def run(double_fail: bool):
+        eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=96,
+                                           auto_rejoin=True,
+                                           rejoin_delay=2.0),
+                         n_instances=2, seed=0)
+        reqs = _reqs(cfg, 6, prompt=10, out=40)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(4):
+            eng.step()
+        if double_fail:
+            eng.fail_instance(0)
+            for _ in range(6):            # rejoin at +2, then re-replicate
+                eng.step()
+            assert eng.instances[0].alive
+            victims = list(eng.instances[1].requests)
+            assert victims
+            resumed = eng.fail_instance(1)
+            assert set(resumed) == set(victims), \
+                "survivor's requests must resume on the rejoined spare"
+        eng.run(2000)
+        return reqs
+
+    normal = run(False)
+    failed = run(True)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)
+
+
+def test_standard_recovery_stalls_group_and_restarts(cfg):
+    """standard mode: victims restart (nothing to promote), the WHOLE group
+    freezes for reload_penalty clock units, and MTTR is the reload penalty
+    — the classic path the paper's Table 1 baselines against."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       replicate=False, recovery="standard",
+                                       auto_rejoin=True, reload_penalty=10.0),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, out=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    victims = list(eng.instances[0].requests)
+    survivor_prog = {rid: req.generated
+                     for rid, req in eng.instances[1].requests.items()}
+    assert victims
+    resumed = eng.fail_instance(0)
+    assert resumed == []                  # standard never resumes seamlessly
+    assert eng.recovery_pending()
+    # group-wide stall: SURVIVOR requests make no progress either
+    for _ in range(5):
+        assert eng.step() == 0
+    for rid, gen in survivor_prog.items():
+        assert eng.instances[1].requests[rid].generated == gen
+    eng.run(600)
+    assert len(eng.done) == 6
+    assert all(reqs[v].n_retries == 1 for v in victims)
+    events = eng.mttr_events()
+    assert events and events[0]["mttr"] == pytest.approx(10.0, abs=1.01)
+    assert eng.instances[0].alive         # reloaded and back
+
+
+def test_kevlarflow_mttr_beats_standard(cfg):
+    """The headline ordering on identical tick workloads: kevlarflow MTTR
+    (decoupled re-form) is a fraction of the standard reload penalty."""
+    def mttr(mode):
+        eng = RealEngine(
+            cfg, EngineConfig(max_slots=8, max_seq=64, recovery=mode,
+                              replicate=(mode == "kevlarflow"),
+                              auto_rejoin=True, rejoin_delay=2.0,
+                              reload_penalty=40.0),
+            n_instances=2, seed=0)
+        for r in _reqs(cfg, 6, out=24):
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        eng.fail_instance(0)
+        eng.run(600)
+        while not eng.mttr_events():      # idle ticks until the rejoin lands
+            eng.step()
+        return eng.mttr_events()[0]["mttr"]
+
+    kf, std = mttr("kevlarflow"), mttr("standard")
+    assert kf < std / 10, (kf, std)
+
+
+def test_rejoin_alive_instance_rejected(cfg):
+    eng = RealEngine(cfg, EngineConfig(max_slots=2, max_seq=64,
+                                       replicate=False), n_instances=2)
+    with pytest.raises(ValueError, match="alive"):
+        eng.rejoin_instance(0)
+
+
+def test_fail_instance_idempotent(cfg):
+    """A repeated fail_instance (e.g. an HTTP retry) is a no-op: the first
+    call's victims — now decoding on the survivor — must NOT be restarted,
+    no duplicate rejoin is scheduled, and generation stays byte-identical."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=96,
+                                       auto_rejoin=True, rejoin_delay=3.0),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, prompt=10, out=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    first = eng.fail_instance(0)
+    assert first
+    again = eng.fail_instance(0)
+    assert again == []
+    assert len(eng.failure_events) == 1
+    assert len(eng._pending_rejoins) == 1
+    eng.run(600)
+    assert len(eng.done) == 6
+    assert all(r.n_retries == 0 for r in reqs)
+
+
+def test_engine_drains_after_unrecovered_failure(cfg):
+    """Without auto_rejoin the dead instance stays down — but once the
+    survivors finish everything, has_pending() must go False (a dead
+    instance holds no requests), or EngineService.drain()/clean shutdown
+    would hang forever."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=64),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, out=16)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    eng.fail_instance(0)
+    assert not eng.instances[0].requests      # lost memory, not pending work
+    eng.run(400)
+    assert len(eng.done) == 6
+    assert not eng.has_pending()
+    assert not eng.recovery_pending()

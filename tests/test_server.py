@@ -2,6 +2,7 @@
 HTTP traffic."""
 import json
 import threading
+import urllib.error
 import urllib.request
 
 import numpy as np
@@ -46,11 +47,33 @@ def test_completion_roundtrip(server):
     assert out2["choices"][0]["token_ids"] == out["choices"][0]["token_ids"]
 
 
+def test_completion_reports_wall_clock_timing(server):
+    """The HTTP layer reports per-request timing on the ONE wall-clock
+    timebase the engine runs on: TTFT > 0, latency >= TTFT, and the
+    absolute stamps are ordered arrival <= first-token <= finish."""
+    svc, cfg = server
+    rng = np.random.default_rng(7)
+    toks = rng.integers(1, cfg.vocab_size, 12).tolist()
+    out = _post("/v1/completions", {"prompt_tokens": toks, "max_tokens": 8})
+    t = out["timing"]
+    assert 0 < t["ttft"] <= t["latency"]
+    assert t["arrival_time"] <= t["admit_time"] <= t["first_token_time"]
+    assert t["first_token_time"] <= t["finish_time"]
+    assert t["ttft"] == pytest.approx(
+        t["first_token_time"] - t["arrival_time"])
+    assert t["latency"] == pytest.approx(
+        t["finish_time"] - t["arrival_time"])
+    assert t["latency"] < 120.0           # sane wall seconds, not ticks
+
+
 def test_health(server):
     with urllib.request.urlopen("http://127.0.0.1:8931/health", timeout=10) as r:
         h = json.loads(r.read())
     assert h["status"] == "ok"
     assert len(h["instances"]) == 2
+    assert h["recovery_mode"] == "kevlarflow"
+    assert h["failure_events"] == []      # nothing injected yet
+    assert all("queued" in i for i in h["instances"])
 
 
 def test_failover_under_live_traffic(server):
@@ -79,3 +102,34 @@ def test_failover_under_live_traffic(server):
     assert not errs, errs
     assert len(results) == 6
     assert all(len(r["choices"][0]["token_ids"]) == 12 for r in results)
+    # every response carries timing even across the failure; requests that
+    # migrated (or restarted) still report a positive TTFT
+    for r in results:
+        assert 0 < r["timing"]["ttft"] <= r["timing"]["latency"]
+    health = json.loads(urllib.request.urlopen(
+        "http://127.0.0.1:8931/health", timeout=10).read())
+    assert len(health["failure_events"]) == 1
+    assert health["failure_events"][0]["mode"] == "kevlarflow"
+
+
+def test_rejoin_endpoint_brings_spare_back(server):
+    """/admin/rejoin_instance re-enters a killed instance into the LB
+    group; new traffic reaches it and double-rejoin is a 409 conflict."""
+    svc, cfg = server
+    health = json.loads(urllib.request.urlopen(
+        "http://127.0.0.1:8931/health", timeout=10).read())
+    if health["instances"][0]["alive"]:              # order-independent
+        _post("/admin/fail_instance", {"instance": 0})
+    out = _post("/admin/rejoin_instance", {"instance": 0})
+    assert out["rejoined_instance"] == 0
+    health = json.loads(urllib.request.urlopen(
+        "http://127.0.0.1:8931/health", timeout=10).read())
+    assert health["instances"][0]["alive"]
+    assert health["failure_events"][0]["mttr"] > 0   # failure->rejoin cycle
+    rng = np.random.default_rng(3)
+    toks = rng.integers(1, cfg.vocab_size, 8).tolist()
+    out = _post("/v1/completions", {"prompt_tokens": toks, "max_tokens": 5})
+    assert len(out["choices"][0]["token_ids"]) == 5
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post("/admin/rejoin_instance", {"instance": 0})
+    assert ei.value.code == 409

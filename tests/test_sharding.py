@@ -3,7 +3,7 @@ small host mesh; the 512-device layouts are exercised by launch/dryrun.py)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.distributed import sharding as sh

@@ -1,8 +1,7 @@
 """End-to-end behaviour tests: the paper's headline claims, asserted against
 the full ServingSystem (same code the benchmarks run)."""
-import pytest
 
-from repro.core.system import PerfModel, ServingSystem
+from repro.core.system import ServingSystem
 from repro.serving.workload import poisson_workload, sharegpt_lengths
 
 

@@ -1,5 +1,4 @@
 """Training substrate: optimizer semantics, data pipeline, checkpoints."""
-import os
 import tempfile
 
 import jax
@@ -10,7 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.training import checkpoint as ck
 from repro.training.data import DataConfig, TokenStream, make_batch
-from repro.training.optimizer import (OptimizerConfig, global_norm,
+from repro.training.optimizer import (OptimizerConfig,
                                       init as opt_init, schedule, update)
 from repro.training.train_loop import TrainerConfig, train
 

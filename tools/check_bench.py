@@ -1,0 +1,157 @@
+"""Benchmark-output schema checker (``make bench-check``).
+
+CI regenerates ``BENCH_latency.json`` / ``BENCH_paged.json`` in the
+bench-smoke job and then runs this, so the bench output can never silently
+rot: a bench that stops emitting a section, emits garbage, or regresses the
+paper's ordering (kevlarflow must beat standard on MTTR and p99 TTFT) turns
+the job red.
+
+Checks, per file:
+
+``BENCH_latency.json``
+  * ``meta`` (profile + run shape) and ``families`` with all three paged
+    families (dense / moe / hybrid);
+  * per family: ``kevlarflow`` and ``standard`` sections, each carrying
+    every headline metric as a finite number, n > 0, and a measured MTTR;
+  * per family: kevlarflow STRICTLY better than standard on MTTR and p99
+    TTFT (the reproduction's acceptance bar), ratios section present.
+
+``BENCH_paged.json``
+  * replication-traffic sections for all three archs with full/delta/int8
+    modes and a delta reduction factor > 1;
+  * ``int8`` byte-reduction and ``recycling`` residency sections.
+
+Exit status 0 = clean; 1 = problems (each printed one per line).
+
+  python tools/check_bench.py [repo_root]
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+LATENCY_METRICS = ("mttr", "latency_avg", "latency_p99", "ttft_avg",
+                   "ttft_p99", "goodput_req_s", "goodput_tok_s")
+LATENCY_FAMILIES = ("dense", "moe", "hybrid")
+PAGED_TRAFFIC_SECTIONS = ("replication_traffic",
+                          "replication_traffic_mixtral_8x7b",
+                          "replication_traffic_recurrentgemma_9b")
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and math.isfinite(x)
+
+
+def check_latency(path: str, problems: list):
+    if not os.path.exists(path):
+        problems.append(f"{path}: missing (run `make bench-latency`)")
+        return
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except json.JSONDecodeError as e:
+        problems.append(f"{path}: invalid json ({e})")
+        return
+    name = os.path.basename(path)
+    if "meta" not in data:
+        problems.append(f"{name}: no meta section")
+    fams = data.get("families", {})
+    for fam in LATENCY_FAMILIES:
+        if fam not in fams:
+            problems.append(f"{name}: family {fam!r} missing")
+            continue
+        per = fams[fam]
+        for mode in ("kevlarflow", "standard"):
+            m = per.get(mode)
+            if not isinstance(m, dict):
+                problems.append(f"{name}: {fam}.{mode} missing")
+                continue
+            if not m.get("n"):
+                problems.append(f"{name}: {fam}.{mode} completed 0 requests")
+            for key in LATENCY_METRICS:
+                if not _num(m.get(key)):
+                    problems.append(
+                        f"{name}: {fam}.{mode}.{key} not a finite number: "
+                        f"{m.get(key)!r}")
+                elif m[key] < 0:
+                    problems.append(
+                        f"{name}: {fam}.{mode}.{key} negative ({m[key]}) — "
+                        "unmeasured")
+        kf, std = per.get("kevlarflow", {}), per.get("standard", {})
+        for key in ("mttr", "ttft_p99"):
+            if _num(kf.get(key)) and _num(std.get(key)) \
+                    and not kf[key] < std[key]:
+                problems.append(
+                    f"{name}: {fam}: kevlarflow {key} ({kf[key]:.3f}) not "
+                    f"strictly better than standard ({std[key]:.3f})")
+        if "ratios" not in per:
+            problems.append(f"{name}: {fam}.ratios missing")
+
+
+def check_paged(path: str, problems: list):
+    if not os.path.exists(path):
+        problems.append(f"{path}: missing (run `make bench-paged`)")
+        return
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except json.JSONDecodeError as e:
+        problems.append(f"{path}: invalid json ({e})")
+        return
+    name = os.path.basename(path)
+    for section in PAGED_TRAFFIC_SECTIONS:
+        sec = data.get(section)
+        if not isinstance(sec, dict):
+            problems.append(f"{name}: section {section!r} missing")
+            continue
+        for mode in ("full", "delta", "int8"):
+            m = sec.get(mode)
+            if not isinstance(m, dict) or not _num(m.get("bytes_total")):
+                problems.append(f"{name}: {section}.{mode} malformed")
+        if _num(sec.get("reduction_x")):
+            if sec["reduction_x"] <= 1.0:
+                problems.append(
+                    f"{name}: {section}: delta replication reduction "
+                    f"{sec['reduction_x']}x <= 1 — delta mode regressed")
+        else:
+            problems.append(f"{name}: {section}.reduction_x missing")
+    int8 = data.get("int8", {})
+    if not int8:
+        problems.append(f"{name}: int8 section missing")
+    for arch, sec in int8.items():
+        if not _num(sec.get("bytes_reduction_x")) \
+                or sec["bytes_reduction_x"] <= 1.0:
+            problems.append(
+                f"{name}: int8.{arch}: quantized replication not smaller "
+                f"than bf16 ({sec.get('bytes_reduction_x')!r})")
+    recycling = data.get("recycling", {})
+    if not recycling:
+        problems.append(f"{name}: recycling section missing")
+    for arch, sec in recycling.items():
+        peak = sec.get("peak_resident_blocks_per_request")
+        bound = sec.get("resident_bound")
+        if not (_num(peak) and _num(bound) and 0 < peak <= bound):
+            problems.append(
+                f"{name}: recycling.{arch}: peak residency {peak!r} outside "
+                f"(0, {bound!r}]")
+
+
+def main(root: str) -> int:
+    problems: list = []
+    check_latency(os.path.join(root, "BENCH_latency.json"), problems)
+    check_paged(os.path.join(root, "BENCH_paged.json"), problems)
+    if problems:
+        print(f"bench-check: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("bench-check: BENCH_latency.json + BENCH_paged.json OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else
+                  os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
