@@ -54,11 +54,11 @@ PROFILES = {
     "full": dict(rps=8.0, duration=5.0, prompt_mean=18.0, output_mean=24.0,
                  max_prompt=40, max_output=40, fail_at=1.5,
                  rejoin_delay=0.3, reload_penalty=6.0,
-                 max_slots=8, max_seq=96),
+                 max_slots=8, max_seq=96, prefill_chunk=16),
     "tiny": dict(rps=8.0, duration=2.0, prompt_mean=14.0, output_mean=14.0,
                  max_prompt=24, max_output=20, fail_at=0.7,
                  rejoin_delay=0.15, reload_penalty=1.5,
-                 max_slots=8, max_seq=64),
+                 max_slots=8, max_seq=64, prefill_chunk=8),
 }
 
 
@@ -96,6 +96,34 @@ def _warmup(svc, cfg, prof, rng):
         svc.wait(req, timeout=120.0)
 
 
+def _sweeps(engine, measured, page: int) -> Dict:
+    """CI-artifact sweeps (chunk-size regressions show up here):
+
+    * TPOT vs active slots — median wall-clock step time at each decode
+      occupancy, from the engine's per-step samples. Chunked prefill's
+      whole point is that this curve stays flat while admissions stream
+      in; an inline-prefill regression spikes the low-occupancy bins.
+    * TTFT vs prompt length — average TTFT per prefill bucket. A chunk
+      scheduling regression shows up as TTFT growing superlinearly in
+      prompt length.
+    """
+    from repro.models.paged_decode import next_bucket
+
+    by_occ: Dict[int, List[float]] = {}
+    for n_active, dt in engine.step_samples:
+        by_occ.setdefault(n_active, []).append(dt)
+    tpot = {str(k): round(float(np.median(v)) * 1e3, 3)
+            for k, v in sorted(by_occ.items())}
+    by_bucket: Dict[int, List[float]] = {}
+    for r in measured:
+        if r.first_token_time >= 0:
+            by_bucket.setdefault(next_bucket(r.prompt_len, lo=page),
+                                 []).append(r.ttft)
+    ttft = {str(b): round(float(np.mean(v)), 4)
+            for b, v in sorted(by_bucket.items())}
+    return {"tpot_ms_vs_active_slots": tpot, "ttft_s_vs_prompt_bucket": ttft}
+
+
 def run_mode(family: str, mode: str, prof: dict, seed: int = 0) -> Dict:
     """One measured run: open-loop Poisson replay + one failure mid-run."""
     from repro.configs import get_config
@@ -109,11 +137,13 @@ def run_mode(family: str, mode: str, prof: dict, seed: int = 0) -> Dict:
         max_slots=prof["max_slots"], max_seq=prof["max_seq"],
         recovery=mode, replicate=(mode == "kevlarflow"),
         auto_rejoin=True, rejoin_delay=prof["rejoin_delay"],
-        reload_penalty=prof["reload_penalty"])
+        reload_penalty=prof["reload_penalty"],
+        prefill_chunk=prof.get("prefill_chunk", 0))
     svc = EngineService(cfg, ecfg, n_instances=2)
     rng = np.random.default_rng(seed)
     try:
         _warmup(svc, cfg, prof, rng)
+        svc.engine.step_samples.clear()      # sweeps measure the run only
         work = poisson_workload(
             prof["rps"], prof["duration"], seed=seed,
             prompt_mean=prof["prompt_mean"], output_mean=prof["output_mean"],
@@ -145,6 +175,7 @@ def run_mode(family: str, mode: str, prof: dict, seed: int = 0) -> Dict:
     finally:
         svc.shutdown()
     m = summarize(measured, span=makespan)
+    m["sweeps"] = _sweeps(svc.engine, measured, cfg.page_size)
     m["mode"] = mode
     m["mttr"] = events[0]["mttr"] if events else -1.0
     m["n_submitted"] = len(measured)

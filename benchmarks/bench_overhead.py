@@ -6,8 +6,10 @@ blocks/step for full-snapshot vs dirty-block-delta vs int8-quantized-delta
 modes (delta: per-step traffic proportional to dirty blocks, ~1 block per
 active request, instead of the whole live cache; int8: the same dirty
 blocks at ~half the bytes per message — int8 pages + scales, and ~4x
-smaller hybrid state blobs). Results land in ``BENCH_paged.json``
-(``replication_traffic*`` and ``int8`` sections)."""
+smaller hybrid state blobs), plus the wall-clock win of step-overlapped
+(async double-buffered) replication vs shipping synchronously in-step.
+Results land in ``BENCH_paged.json`` (``replication_traffic*``, ``int8``
+and ``repl_overlap`` sections)."""
 from __future__ import annotations
 
 import json
@@ -71,6 +73,91 @@ def replication_traffic(mode: str, arch: str = "llama3-8b",
     stats["live_cache_blocks_per_request"] = \
         eng.instances[0].pool.blocks_for_tokens(prompt + out)
     return stats
+
+
+def repl_overlap(arch: str = "llama3-8b", n_requests: int = 6,
+                 prompt: int = 24, out: int = 32):
+    """Wall-clock cost of replication on the step loop, three ways:
+
+      * ``sync``  — repl_async=False: the step blocks until the delta is
+        durable on the peer (the pre-overlap baseline),
+      * ``async`` — repl_async=True: step N's delta ships while step N+1
+        computes (the double-buffer default),
+      * ``off``   — replicate=False: the no-resilience floor.
+
+    Two views, both median ms per steady-state decode step:
+
+      * whole-step time per variant (context — on CPU the decode forward
+        dominates, so the three are within machine noise of each other);
+      * *replication critical-path* time — wall clock spent inside the
+        stage + ship calls on the step's critical path. Sync pays
+        stage + copy + block-until-durable; async pays stage + dispatch
+        only (the copies execute under the next step's compute). The
+        interesting number is ``overlap_saves_ms_per_step`` =
+        sync_repl - async_repl."""
+    import time as _time
+
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config(arch).reduced()
+    step_ms, repl_ms = {}, {}
+    for variant in ("sync", "async", "off"):
+        eng = RealEngine(cfg, EngineConfig(
+            max_slots=4, max_seq=96,
+            replicate=(variant != "off"),
+            repl_async=(variant == "async")),
+            n_instances=2, seed=0)
+        # replication critical-path seconds; depth guard so the sync path
+        # (_replicate calling flush_replication inside itself) counts once
+        spent = {"s": 0.0, "depth": 0}
+
+        def timed(fn, spent=spent):
+            def wrapper(*a, **kw):
+                if spent["depth"]:
+                    return fn(*a, **kw)
+                spent["depth"] += 1
+                t0 = _time.perf_counter()
+                try:
+                    return fn(*a, **kw)
+                finally:
+                    spent["depth"] -= 1
+                    spent["s"] += _time.perf_counter() - t0
+            return wrapper
+
+        eng._replicate = timed(eng._replicate)
+        eng.flush_replication = timed(eng.flush_replication)
+        rng = np.random.default_rng(0)
+        for i in range(n_requests):
+            eng.submit(Request(
+                rid=i, prompt_len=prompt, max_new_tokens=out,
+                arrival_time=0.0,
+                prompt_tokens=rng.integers(1, cfg.vocab_size,
+                                           prompt).tolist()))
+        for _ in range(4):              # admit + compile + first deltas
+            eng.step()
+        times, repl = [], []
+        while eng.has_pending() and len(times) < 200:
+            t0 = _time.perf_counter()
+            r0 = spent["s"]
+            eng.step()
+            times.append(_time.perf_counter() - t0)
+            repl.append(spent["s"] - r0)
+        step_ms[variant] = round(float(np.median(times)) * 1e3, 3)
+        repl_ms[variant] = round(float(np.median(repl)) * 1e3, 3)
+    return {
+        "arch": arch,
+        "n_requests": n_requests,
+        "sync_ms_per_step": step_ms["sync"],
+        "async_ms_per_step": step_ms["async"],
+        "off_ms_per_step": step_ms["off"],
+        "sync_repl_ms_per_step": repl_ms["sync"],
+        "async_repl_ms_per_step": repl_ms["async"],
+        "overlap_saves_ms_per_step": round(
+            repl_ms["sync"] - repl_ms["async"], 3),
+    }
 
 
 # sliding-window archs (reduced window = 64): serve to 2x the window and
@@ -185,6 +272,15 @@ def main(fast: bool = True):
         }
     update_bench_json("int8", int8_section)
     emit(trows, TRAFFIC_HEADER)
+
+    # sync vs async (step-overlapped) replication wall-clock per step
+    overlap = repl_overlap()
+    update_bench_json("repl_overlap", overlap)
+    emit([fmt_row("repl_overlap", overlap["arch"], "sync/async/off",
+                  overlap["sync_ms_per_step"], overlap["async_ms_per_step"],
+                  overlap["off_ms_per_step"],
+                  overlap["overlap_saves_ms_per_step"])],
+         "bench,arch,modes,sync_ms,async_ms,off_ms,overlap_saves_ms")
 
     # sliding-window recycling: resident footprint + traffic at 2x window
     rrows = []

@@ -160,6 +160,28 @@ def recurrent_prefill(cfg, p, x, true_len):
     return x, h, conv.astype(jnp.bfloat16)
 
 
+def recurrent_prefill_resume(cfg, p, x, take, state):
+    """``recurrent_prefill`` for ONE CHUNK of a chunked prompt: resume the
+    recurrence from a carried decode state and extract the next carried
+    state at row ``take`` of this chunk (traced; rows >= take are padding).
+
+    x: (B, C, d) chunk activations; state: {"h": (B,w) f32, "conv":
+    (B, conv_width-1, w) bf16} — the state after the previous chunk (all
+    zeros before the first chunk, which makes ``_conv1d``'s zero left-pad
+    and ``rglru_scan``'s h0 injection exact no-ops, so chunk 0 needs no
+    special program). Returns (x_out, h, conv) like ``recurrent_prefill``.
+    """
+    x, _, branch, out = _recurrent_core(cfg, p, x, state)
+    h = jax.lax.dynamic_slice_in_dim(out, take - 1, 1, axis=1)[:, 0]
+    k = p["conv_w"].shape[0]
+    # xp = the conv input this chunk actually saw: carried state rows then
+    # the chunk's pre-conv branch — row j of the chunk sits at xp row
+    # j + k - 1, so rows [take, take + k - 2] are the next carried state
+    xp = jnp.concatenate([state["conv"].astype(branch.dtype), branch], axis=1)
+    conv = jax.lax.dynamic_slice_in_dim(xp, take, k - 1, axis=1)
+    return x, h, conv.astype(jnp.bfloat16)
+
+
 # --------------------------------------------------------------------------
 # state blob codec (paged serving: RG-LRU state as an opaque replication unit)
 # --------------------------------------------------------------------------

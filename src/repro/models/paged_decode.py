@@ -125,6 +125,126 @@ def prefill_bucketed(cfg, params, tokens, true_len, *, q_chunk: int = 1024):
     return logits[:, 0], ks, vs
 
 
+def init_chunk_buffers(cfg, bucket: int):
+    """Zeroed full-precision KV carry buffers for a chunked prefill:
+    (L_kv, S_bucket, K, D) in the ACTIVATION dtype — later chunks attend
+    over earlier chunks' keys at exactly the precision the monolithic
+    prefill sees, which is what makes chunked == monolithic bitwise on
+    dense/MoE. Cast to the pool's KV dtype only at page-write time."""
+    nl = len(kv_layer_indices(cfg))
+    shape = (nl, bucket, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+def init_hybrid_chunk_state(cfg, batch: int = 1):
+    """Fresh per-rglru-layer carry state for a chunked hybrid prefill.
+    Zeros make the first chunk's resume path exactly equivalent to a fresh
+    scan (see ``hybrid.recurrent_prefill_resume``)."""
+    w = cfg.lru_width
+    return [{"h": jnp.zeros((batch, w), jnp.float32),
+             "conv": jnp.zeros((batch, H.CONV_WIDTH - 1, w), jnp.bfloat16)}
+            for _ in H.recurrent_layer_indices(cfg)]
+
+
+def prefill_chunk(cfg, params, tokens, start, take, k_buf, v_buf, *,
+                  q_chunk: int = 1024):
+    """One chunk of a chunked prefill (dense/MoE).
+
+    tokens: (1, C) int32 — prompt rows at absolute positions
+    [start, start + C); rows past the true prompt end are padding (causality
+    plus the ``take``-relative logits slice make them invisible).
+    start: () int32 — absolute position of the chunk's first row (must be a
+    multiple of C; the engine normalizes the chunk size to a power of two so
+    chunks always tile the bucket).
+    take: () int32 — rows of this chunk that are real prompt (== C except on
+    the final, possibly partial, chunk).
+    k_buf/v_buf: (L, S_bucket, K, D) carry from ``init_chunk_buffers``.
+
+    Each layer updates its buffer rows [start, start + C) then attends the
+    C query rows against the FULL buffer with ``q_offset=start`` — masked
+    (future / out-of-window) entries contribute exact zeros, so the chunked
+    KV rows and logits are bitwise identical to ``prefill_bucketed``.
+    Returns (logits (1, V) at absolute position start + take - 1, k_buf,
+    v_buf). Intermediate chunks' logits are a by-product (the unembed of one
+    row is cheap); only the final chunk's are sampled.
+    """
+    x = L.embed(params["embed"], tokens)
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q_chunk = min(q_chunk, c)
+
+    def body(x, layer):
+        p, (kb, vb) = layer
+        h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], cfg, h, positions)
+        kb = jax.lax.dynamic_update_slice_in_dim(kb, k[0], start, axis=0)
+        vb = jax.lax.dynamic_update_slice_in_dim(vb, v[0], start, axis=0)
+        o = L.attention(q, kb[None], vb[None], causal=True,
+                        window=cfg.sliding_window, q_offset=start,
+                        q_chunk=q_chunk)
+        x = x + L.attn_out(p["attn"], o)
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, p, h, decode=False)
+        return x, (kb, vb)
+
+    x, (k_buf, v_buf) = jax.lax.scan(body, x,
+                                     (params["layers"], (k_buf, v_buf)))
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    xt = jax.lax.dynamic_slice_in_dim(x, take - 1, 1, axis=1)
+    logits = L.unembed(params["embed"], cfg, xt.astype(jnp.float32))
+    return logits[:, 0], k_buf, v_buf
+
+
+def prefill_hybrid_chunk(cfg, params, tokens, start, take, k_buf, v_buf,
+                         rstates, *, q_chunk: int = 1024):
+    """One chunk of a chunked hybrid prefill: attention layers carry KV
+    buffers exactly like ``prefill_chunk`` (L axis = attn layers in depth
+    order); RG-LRU layers resume from and re-emit per-layer carry states
+    (``hybrid.recurrent_prefill_resume``). The recurrence is mathematically
+    identical to the monolithic scan but the associative-scan reduction tree
+    differs across chunk lengths, so hybrid chunking is allclose + same
+    greedy token rather than bitwise.
+
+    Returns (logits (1, V) at start + take - 1, k_buf, v_buf, rstates,
+    blob (1, state_blob_words)) — the blob is packed every chunk (a cheap
+    concat) so the final chunk's output is engine-ready.
+    """
+    x = L.embed(params["embed"], tokens)
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q_chunk = min(q_chunk, c)
+    new_states = []
+    ai = ri = 0
+    for p, kind in zip(params["layers"], cfg.layer_kinds()):
+        if kind == "rglru":
+            x, h, conv = H.recurrent_prefill_resume(cfg, p, x, take,
+                                                    rstates[ri])
+            new_states.append({"h": h, "conv": conv})
+            ri += 1
+        else:
+            hh = L.rms_norm(x, p["norm_t"], cfg.norm_eps)
+            q, k, v = L.qkv_proj(p["attn"], cfg, hh, positions)
+            kb = jax.lax.dynamic_update_slice_in_dim(k_buf[ai], k[0], start,
+                                                     axis=0)
+            vb = jax.lax.dynamic_update_slice_in_dim(v_buf[ai], v[0], start,
+                                                     axis=0)
+            k_buf = k_buf.at[ai].set(kb)
+            v_buf = v_buf.at[ai].set(vb)
+            o = L.attention(q, kb[None], vb[None], causal=True,
+                            window=cfg.sliding_window, q_offset=start,
+                            q_chunk=q_chunk)
+            x = x + L.attn_out(p["attn"], o)
+            hh = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], hh)
+            ai += 1
+    x = L.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
+    xt = jax.lax.dynamic_slice_in_dim(x, take - 1, 1, axis=1)
+    logits = L.unembed(params["embed"], cfg, xt.astype(jnp.float32))
+    blob = H.pack_state_blob(cfg, new_states)
+    return logits[:, 0], k_buf, v_buf, new_states, blob
+
+
 def pack_pages(k_seq, v_seq, n_pages: int, page: int):
     """(L, S, K, D) prefill KV -> (L, K, n_pages, page, D) pool blocks.
     S must cover n_pages*page (bucket padding guarantees it)."""

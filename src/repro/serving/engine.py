@@ -55,6 +55,7 @@ units of weight reloading before serving resumes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -85,6 +86,21 @@ class EngineConfig:
     # and replication ships the quantized bytes — roughly half the HBM read
     # per decode step and half the bytes per replication message
     kv_quant: bool = False
+    # chunked prefill: split each admitted prompt into fixed-size chunks
+    # (normalized to a power of two >= page_size) and run ONE chunk per
+    # mid-prefill slot per engine step, interleaved with ongoing decodes —
+    # admissions never stall the decode batch on a whole-prompt forward
+    # pass. 0 = monolithic admission (prefill inline at admit time), which
+    # is the exact pre-chunking code path.
+    prefill_chunk: int = 0
+    # async double-buffered replication: _replicate STAGES the step's dirty
+    # block/blob ids (metadata only) and the data copies ship at the top of
+    # the NEXT step, overlapped with that step's compute. flush_replication
+    # is the barrier — fail_instance/rejoin_instance flush before touching
+    # replicas, so failover stays byte-identical. False = ship in-step and
+    # block until the replica is durable (the synchronous baseline
+    # bench_overhead's repl_overlap section measures against).
+    repl_async: bool = True
     # recovery policy applied by fail_instance. "kevlarflow": in-flight
     # requests resume from promoted replicas, the dead instance's queue
     # reroutes to survivors, and a warm spare rejoins after rejoin_delay
@@ -134,6 +150,10 @@ class FamilyExecutor:
                 donate_argnums=(2, 3, 4, 5, 6, 7) if quant else (2, 3, 6))
             self.prefill = jax.jit(
                 lambda p, toks, n: PD.prefill_hybrid_bucketed(cfg, p, toks, n))
+            self.prefill_chunk = jax.jit(
+                lambda p, toks, start, take, kb, vb, st:
+                PD.prefill_hybrid_chunk(cfg, p, toks, start, take, kb, vb,
+                                        st))
         else:
             def _step(p, tok, k_pages, v_pages, ks, vs, bt, pos, base, rng):
                 return PD.decode_step_paged(
@@ -145,6 +165,16 @@ class FamilyExecutor:
                 _step, donate_argnums=(2, 3, 4, 5) if quant else (2, 3))
             self.prefill = jax.jit(
                 lambda p, toks, n: PD.prefill_bucketed(cfg, p, toks, n))
+            self.prefill_chunk = jax.jit(
+                lambda p, toks, start, take, kb, vb:
+                PD.prefill_chunk(cfg, p, toks, start, take, kb, vb))
+        # chunked admission: chunk size normalized to a power of two >= the
+        # page size so chunks always tile the prefill bucket exactly
+        # (dynamic_update_slice must never clamp) and the chunk-program jit
+        # cache stays O(log max_seq) like the bucketed prefill's
+        self.chunk = PD.next_bucket(ecfg.prefill_chunk,
+                                    lo=cfg.page_size) \
+            if ecfg.prefill_chunk > 0 else 0
 
 
 class RealInstance:
@@ -202,6 +232,10 @@ class RealInstance:
         ex = executor or FamilyExecutor(cfg, ecfg)
         self._decode = ex.decode
         self._prefill = ex.prefill
+        self._prefill_chunk = ex.prefill_chunk
+        self.chunk = ex.chunk
+        # slot -> in-flight chunked-prefill job (PREFILL-state requests)
+        self.prefill_jobs: Dict[int, dict] = {}
 
     def _stamp(self, now: float) -> float:
         """Timestamp an event: fresh wall-clock reading when a clock is
@@ -257,6 +291,23 @@ class RealInstance:
         bucket = PD.next_bucket(n, lo=self.pool.page_size)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt_tokens
+        req.instance_id = self.instance_id
+        self.slot_rid[slot] = req.rid
+        self.requests[req.rid] = req
+        if self.chunk:
+            # chunked admission: pages are reserved, compute is deferred —
+            # prefill_step runs one chunk per engine step so the decode
+            # batch never stalls on a whole-prompt forward pass
+            req.state = RequestState.PREFILL
+            k_buf, v_buf = PD.init_chunk_buffers(self.cfg, bucket)
+            self.prefill_jobs[slot] = {
+                "req": req, "refs": refs, "toks": toks, "bucket": bucket,
+                "done": 0, "pages_written": 0, "k_buf": k_buf,
+                "v_buf": v_buf,
+                "rstates": PD.init_hybrid_chunk_state(self.cfg)
+                if self.family == "hybrid" else None,
+            }
+            return True
         if self.family == "hybrid":
             logits, k_seq, v_seq, blob = self._prefill(
                 self.params, jnp.asarray(toks), jnp.int32(n))
@@ -273,10 +324,16 @@ class RealInstance:
         self.pool.write_blocks([r.slot for r in refs],
                                *PD.pack_pages(k_seq[:, span:], v_seq[:, span:],
                                               len(refs), self.pool.page_size))
+        self._seat(slot, req, refs, logits, now)
+        return True
+
+    def _seat(self, slot: int, req: Request, refs, logits, now: float):
+        """Shared admission tail: point the slot at its pages, sample the
+        prompt's first token, and flip the request to DECODE."""
         row = np.full(self.pages_per_seq, self.scratch, np.int32)
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
-        self.slot_base[slot] = span
+        self.slot_base[slot] = refs[0].logical_idx * self.pool.page_size
         if self.ecfg.temperature > 0:
             self._rng, admit_rng = jax.random.split(self._rng)
         else:
@@ -285,22 +342,100 @@ class RealInstance:
                        temperature=self.ecfg.temperature)
         req.output_tokens = [int(first[0])]
         req.generated = 1
+        req.prefill_progress = 1.0
         req.state = RequestState.DECODE
-        req.instance_id = self.instance_id
         if req.first_token_time < 0:
-            # the prefill above produced the first token — stamp AFTER it
-            # (so first_token_time - admit_time is the prefill cost)
+            # the prefill produced the first token — stamp AFTER it (so
+            # first_token_time - admit_time is the prefill cost)
             req.first_token_time = self._stamp(now)
-        self.slot_rid[slot] = req.rid
-        self.slot_pos[slot] = n
-        self.requests[req.rid] = req
-        return True
+        self.slot_pos[slot] = req.prompt_len
+
+    # -- chunked prefill -------------------------------------------------------
+    def prefill_depth(self) -> int:
+        """Slots currently mid-chunked-prefill (pending work for the
+        service loop and the /health endpoint)."""
+        return len(self.prefill_jobs)
+
+    def prefill_step(self, now: float = 0.0) -> int:
+        """Advance every mid-prefill slot by ONE chunk — the interleaving
+        policy: each engine step gives each admitted-but-unprefilled slot
+        one chunk of prompt compute next to the ongoing decodes. Returns
+        the number of chunks run."""
+        if not self.alive or not self.prefill_jobs:
+            return 0
+        ran = 0
+        for slot in sorted(self.prefill_jobs):
+            job = self.prefill_jobs[slot]
+            req = job["req"]
+            n = req.prompt_len
+            # short prompts collapse to a single whole-bucket chunk; both
+            # sizes are powers of two, so chunks tile the bucket exactly
+            c = min(self.chunk, job["bucket"])
+            c0 = job["done"]
+            take = min(c, n - c0)
+            tc = np.zeros((1, c), np.int32)
+            hi = min(c0 + c, job["bucket"])
+            tc[0, :hi - c0] = job["toks"][0, c0:hi]
+            if self.family == "hybrid":
+                (logits, job["k_buf"], job["v_buf"], job["rstates"],
+                 blob) = self._prefill_chunk(
+                    self.params, jnp.asarray(tc), jnp.int32(c0),
+                    jnp.int32(take), job["k_buf"], job["v_buf"],
+                    job["rstates"])
+            else:
+                logits, job["k_buf"], job["v_buf"] = self._prefill_chunk(
+                    self.params, jnp.asarray(tc), jnp.int32(c0),
+                    jnp.int32(take), job["k_buf"], job["v_buf"])
+                blob = None
+            job["done"] = c0 + take
+            req.prefill_progress = job["done"] / n
+            ran += 1
+            final = job["done"] >= n
+            self._write_ready_pages(job, final)
+            if final:
+                if self.family == "hybrid":
+                    bref = self.pool.blob_ref(req.rid)
+                    self.pool.write_blob(bref.slot, blob[0])
+                    self.slot_blob[slot] = bref.slot
+                self._seat(slot, req, job["refs"], logits, now)
+                del self.prefill_jobs[slot]
+        return ran
+
+    def _write_ready_pages(self, job: dict, final: bool):
+        """Incremental page writes: pages fully covered by the rows prefilled
+        so far land in the pool as soon as their last row is computed (the
+        final chunk also flushes the partial tail page). On a windowed pool
+        only the allocated window-tail pages exist — writes start at the
+        first allocated logical page."""
+        page = self.pool.page_size
+        refs = job["refs"]
+        first_page = refs[0].logical_idx
+        if final:
+            ready = len(refs)
+        else:
+            ready = min(max(0, job["done"] // page - first_page), len(refs))
+        lo = job["pages_written"]
+        if ready <= lo:
+            return
+        kv_dt = PD.kv_dtype(self.cfg)
+        span0 = (first_page + lo) * page
+        span1 = (first_page + ready) * page
+        self.pool.write_blocks(
+            [r.slot for r in refs[lo:ready]],
+            *PD.pack_pages(job["k_buf"][:, span0:span1].astype(kv_dt),
+                           job["v_buf"][:, span0:span1].astype(kv_dt),
+                           ready - lo, page))
+        job["pages_written"] = ready
 
     # -- one continuous-batching iteration ------------------------------------
     def step(self, now: float = 0.0) -> List[Request]:
         if not self.alive:
             return []
-        active = [i for i, r in enumerate(self.slot_rid) if r >= 0]
+        # mid-chunked-prefill slots (PREFILL state) hold pages but no first
+        # token yet — they join the decode batch the step after their final
+        # chunk lands
+        active = [i for i, r in enumerate(self.slot_rid)
+                  if r >= 0 and self.requests[r].state == RequestState.DECODE]
         if not active:
             return []
         toks = np.zeros(self.ecfg.max_slots, np.int32)
@@ -383,6 +518,7 @@ class RealInstance:
         """Free a request's engine slot + primary blocks (+ state blob)."""
         if rid in self.requests:
             slot = self.slot_rid.index(rid)
+            self.prefill_jobs.pop(slot, None)
             self.slot_rid[slot] = -1
             self.slot_pos[slot] = 0
             self.slot_base[slot] = 0
@@ -452,6 +588,7 @@ class RealInstance:
     def fail(self):
         self.alive = False
         self.pending_retires.clear()   # a dead primary sends no retires
+        self.prefill_jobs.clear()      # mid-chunk work is lost with the node
         # a dead instance holds no requests (its memory is lost) — the
         # engine captures the victims first; leaving them here would keep
         # has_pending() true forever and hang drain()
@@ -483,6 +620,12 @@ class RealEngine:
         # rid -> {"peer", "home", "pos", "tokens"} (tiny host-side metadata;
         # the KV payload lives in the target pool's hosted replica blocks)
         self.replica_meta: Dict[int, dict] = {}
+        # async replication double-buffer: copy jobs staged by
+        # _stage_replication at the end of step N and shipped by
+        # flush_replication at the top of step N+1 (or by the
+        # fail/rejoin barrier). Each entry: {"src", "dst" instance ids,
+        # "blocks": (src_slots, dst_slots), "blobs": (src_slots, dst_slots)}
+        self._pending_ship: List[dict] = []
         # arrivals not yet routed (normally drained every step; holds work
         # only while NO instance is alive)
         self.waiting: List[Request] = []
@@ -508,6 +651,9 @@ class RealEngine:
         # sliding-window recycling: retire messages sent to replica hosts
         # (metadata-only — a retire carries no KV payload)
         self.retire_msgs_total = 0
+        # (n_active_slots, wall_seconds) per decode step — bench_latency
+        # aggregates these into its TPOT-vs-active-slots sweep
+        self.step_samples: List[tuple] = []
 
     def submit(self, req: Request):
         self.waiting.append(req)
@@ -566,6 +712,12 @@ class RealEngine:
         made forward progress (0 while stalled or idle — the service loop
         backs off instead of spinning)."""
         self.t = self.clock() if self.clock is not None else self.t + 1.0
+        _t0 = time.perf_counter()
+        # async replication: ship the PREVIOUS step's staged delta before
+        # anything here mutates the pools — the copies execute on the
+        # backend while this step's host-side work and decode dispatch
+        # proceed (step N's replication overlaps step N+1's compute)
+        self.flush_replication()
         for iid, ready in list(self._pending_rejoins):
             if self.t >= ready:
                 if self.instances[iid].alive:   # e.g. manual admin rejoin
@@ -598,9 +750,13 @@ class RealEngine:
                 while q and other.free_slots() and other.admit(q[0], self.t):
                     q.pop(0)
                     progressed += 1
+        n_active = sum(len(i.requests) for i in alive)
         for inst in alive:
             self.active_request_steps += len(inst.requests)
             progressed += len(inst.requests)
+            # one prompt chunk per mid-prefill slot, then the decode batch:
+            # admissions interleave with generation instead of stalling it
+            inst.prefill_step(self.t)
             finished = inst.step(self.t)
             # retire hosted replicas of pages the primary recycled this
             # step — BEFORE the delta pass, so replica tables mirror the
@@ -615,9 +771,21 @@ class RealEngine:
             for req in finished:
                 self._drop_replica_of(req.rid)
                 self.done.append(req)
+        # per-step admission, second pass: slots and pool pages freed by
+        # this step's completions/recycles admit queued work NOW instead of
+        # waiting a full engine iteration
+        for inst in alive:
+            q = self.queues[inst.instance_id]
+            while q and inst.free_slots() and inst.admit(q[0], self.t):
+                q.pop(0)
+                progressed += 1
         if self.ecfg.replicate:
             self._replicate()
             self.repl_steps += 1
+        if n_active:
+            self.step_samples.append((n_active, time.perf_counter() - _t0))
+            if len(self.step_samples) > 20000:      # bound long-run memory
+                del self.step_samples[:10000]
         return progressed
 
     def _drop_replica_of(self, rid: int):
@@ -630,7 +798,43 @@ class RealEngine:
         """Background KV replication at block granularity. Delta mode copies
         only blocks with ``replicated == False`` (cleared by ``append_token``
         / prefill allocation); full mode re-copies every live block — the
-        seed's whole-snapshot behaviour, kept for the overhead benchmark."""
+        seed's whole-snapshot behaviour, kept for the overhead benchmark.
+
+        The pass is split in two: ``_stage_replication`` runs now and does
+        ALL the metadata work (hosting, retire/drop bookkeeping, dirty-flag
+        clearing, byte accounting) plus snapshots the dirty block/blob slot
+        ids; the data copies ship at the top of the next step
+        (``flush_replication``) so they overlap that step's compute. With
+        ``repl_async=False`` the copies ship here and the step blocks until
+        the replica is durable — the synchronous baseline."""
+        self._stage_replication()
+        if not self.ecfg.repl_async:
+            self.flush_replication(block=True)
+
+    def flush_replication(self, block: bool = False):
+        """Ship every staged replica delta now — the async double-buffer's
+        barrier. Called at the top of every step, and by ``fail_instance``
+        / ``rejoin_instance`` BEFORE they touch replicas, so a promoted
+        replica always carries the bytes of the primary's last completed
+        step (failover stays byte-identical under async shipping).
+
+        Safe between steps: nothing mutates the pools between the stage at
+        the end of step N and this flush, and a target that died since
+        staging is skipped (its hosted blocks are already gone)."""
+        pending, self._pending_ship = self._pending_ship, []
+        shipped = []
+        for msg in pending:
+            src = self.instances[msg["src"]]
+            dst = self.instances[msg["dst"]]
+            if not dst.alive:
+                continue
+            src.pool.copy_blocks_to(dst.pool, *msg["blocks"])
+            src.pool.copy_blobs_to(dst.pool, *msg["blobs"])
+            shipped.append(dst)
+        if block and shipped:
+            jax.block_until_ready([d.pool.k for d in shipped])
+
+    def _stage_replication(self):
         full = self.ecfg.replication == "full"
         for inst in self.instances:
             if not inst.alive:
@@ -644,6 +848,11 @@ class RealEngine:
             blob_src: List[int] = []
             blob_dst: List[int] = []
             for rid, req in inst.requests.items():
+                # mid-chunked-prefill requests have no complete page set to
+                # resume from (and no sampled tokens): their pages ship in
+                # the first pass after they enter DECODE
+                if req.state != RequestState.DECODE:
+                    continue
                 # the ring target can change (failure, spare rejoin): drop
                 # the replica still hosted on the PREVIOUS home, or its
                 # blocks leak for the request's lifetime
@@ -697,8 +906,11 @@ class RealEngine:
                     "tokens": list(req.output_tokens),
                 }
                 req.replicated_through = req.total_len
-            inst.pool.copy_blocks_to(tgt.pool, src_slots, dst_slots)
-            inst.pool.copy_blobs_to(tgt.pool, blob_src, blob_dst)
+            if src_slots or blob_src:
+                self._pending_ship.append(
+                    {"src": inst.instance_id, "dst": tgt_id,
+                     "blocks": (src_slots, dst_slots),
+                     "blobs": (blob_src, blob_dst)})
             self.repl_blocks_total += len(src_slots)
             self.repl_blobs_total += len(blob_src)
             self.repl_bytes_total += \
@@ -747,6 +959,10 @@ class RealEngine:
             # last step's stamp may be stale on an idle engine, and the
             # stall/rejoin deadlines anchor on failure time
             self.t = self.clock()
+        # async-replication barrier: the last step's staged delta must land
+        # on the hosts before any replica is promoted or dropped, or
+        # failover would resume from one-step-stale bytes
+        self.flush_replication()
         standard = self.ecfg.recovery == "standard"
         victims = list(inst.requests.values())
         drained = self.queues[instance_id]
@@ -811,6 +1027,9 @@ class RealEngine:
             raise ValueError(f"instance {instance_id} is alive")
         if self.clock is not None:
             self.t = self.clock()       # admin-thread call: stamp MTTR now
+        # barrier before the instance object (and its pool) is replaced —
+        # staged copies must never resolve against the fresh pool's slots
+        self.flush_replication()
         self._pending_rejoins = [(i, t) for i, t in self._pending_rejoins
                                  if i != instance_id]
         inst = RealInstance(self.cfg, self.params, self.ecfg, instance_id,

@@ -452,27 +452,26 @@ class PagedKVPool:
 
     def copy_blocks_to(self, other: "PagedKVPool",
                        src_slots: List[int], dst_slots: List[int]):
-        """Batched block replication: this step's dirty blocks in one fused
-        gather/scatter (the per-step delta traffic). Quantized pools ship
-        the int8 bytes + scales verbatim — no requantization, so the hosted
-        replica is bit-identical to the primary block."""
+        """Batched block replication: this step's dirty blocks in ONE fused
+        jitted gather+scatter per pool pair — eager gathers here cost
+        milliseconds of host-side dispatch per call, which was the dominant
+        per-step replication overhead. Quantized pools ship the int8 bytes
+        + scales verbatim — no requantization, so the hosted replica is
+        bit-identical to the primary block."""
         if not (self.real and other.real) or not src_slots:
             return
         assert self.quantized == other.quantized, \
             "replication peers must agree on KV quantization"
-        src = jnp.asarray(src_slots, jnp.int32)
-        dst = jnp.asarray(dst_slots, jnp.int32)
+        src = jnp.asarray(_pad_pow2(src_slots), jnp.int32)
+        dst = jnp.asarray(_pad_pow2(dst_slots), jnp.int32)
         if self.quantized:
             (other.k, other.v, other.k_scale, other.v_scale) = \
-                _scatter_blocks_q(other.k, other.v, other.k_scale,
-                                  other.v_scale, dst,
-                                  self.k[:, :, src], self.v[:, :, src],
-                                  self.k_scale[:, :, src],
-                                  self.v_scale[:, :, src])
+                _copy_blocks_q(self.k, self.v, self.k_scale, self.v_scale,
+                               other.k, other.v, other.k_scale,
+                               other.v_scale, src, dst)
         else:
-            kb = self.k[:, :, src]
-            vb = self.v[:, :, src]
-            other.k, other.v = _scatter_blocks(other.k, other.v, dst, kb, vb)
+            other.k, other.v = _copy_blocks(self.k, self.v,
+                                            other.k, other.v, src, dst)
 
     # -- real-buffer blob IO --------------------------------------------------
     def write_blob(self, slot: int, vec):
@@ -507,15 +506,46 @@ class PagedKVPool:
             return
         assert self.quantized == other.quantized, \
             "replication peers must agree on KV quantization"
-        src = jnp.asarray(src_slots, jnp.int32)
-        dst = jnp.asarray(dst_slots, jnp.int32)
-        other.blobs = _scatter_blobs(other.blobs, dst, self.blobs[src])
+        src = jnp.asarray(_pad_pow2(src_slots), jnp.int32)
+        dst = jnp.asarray(_pad_pow2(dst_slots), jnp.int32)
+        other.blobs = _copy_blobs(self.blobs, other.blobs, src, dst)
         if self.quantized:
-            other.blob_scales = _scatter_blobs(other.blob_scales, dst,
-                                               self.blob_scales[src])
+            other.blob_scales = _copy_blobs(self.blob_scales,
+                                            other.blob_scales, src, dst)
+
+
+def _pad_pow2(idx: List[int]) -> List[int]:
+    """Pad an index list to the next power of two by repeating its last
+    element. Gathers read that slot twice and scatters write the same bytes
+    to the same destination twice — the result is identical — while the
+    copy-op jit cache stays O(log pool) instead of compiling one program
+    per distinct per-step delta size."""
+    n = 1
+    while n < len(idx):
+        n *= 2
+    return idx + [idx[-1]] * (n - len(idx))
 
 
 if jax is not None:
+    @jax.jit
+    def _copy_blocks(src_k, src_v, dst_k, dst_v, src_idx, dst_idx):
+        # gather + scatter in one program: XLA fuses the block movement
+        # into a single dispatch, never materializing the gathered blocks
+        return (dst_k.at[:, :, dst_idx].set(src_k[:, :, src_idx]),
+                dst_v.at[:, :, dst_idx].set(src_v[:, :, src_idx]))
+
+    @jax.jit
+    def _copy_blocks_q(src_k, src_v, src_ks, src_vs,
+                       dst_k, dst_v, dst_ks, dst_vs, src_idx, dst_idx):
+        return (dst_k.at[:, :, dst_idx].set(src_k[:, :, src_idx]),
+                dst_v.at[:, :, dst_idx].set(src_v[:, :, src_idx]),
+                dst_ks.at[:, :, dst_idx].set(src_ks[:, :, src_idx]),
+                dst_vs.at[:, :, dst_idx].set(src_vs[:, :, src_idx]))
+
+    @jax.jit
+    def _copy_blobs(src_pool, dst_pool, src_idx, dst_idx):
+        return dst_pool.at[dst_idx].set(src_pool[src_idx])
+
     @jax.jit
     def _scatter_blocks(k_pool, v_pool, slots, k_blocks, v_blocks):
         return (k_pool.at[:, :, slots].set(k_blocks),

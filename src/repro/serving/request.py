@@ -8,7 +8,8 @@ from typing import List, Optional
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
-    PREFILL = "prefill"
+    PREFILL = "prefill"         # chunked prefill: prompt chunks interleaved
+                                # with decode steps (EngineConfig.prefill_chunk)
     DECODE = "decode"
     MIGRATING = "migrating"     # KevlarFlow: resuming on a replication target
     DONE = "done"

@@ -56,8 +56,12 @@ class EngineService:
                     ev.set()
             if not progressed:
                 # idle, or stalled on a standard-mode weight reload: back
-                # off instead of spinning with the lock held
-                time.sleep(0.002 if self.engine.has_pending() else 0.01)
+                # off instead of spinning with the lock held. A slot mid-
+                # chunked-prefill IS pending work (its next chunk runs on
+                # the next step), so it keeps the loop on the fast cadence
+                busy = self.engine.has_pending() or any(
+                    i.prefill_depth() for i in self.engine.instances)
+                time.sleep(0.002 if busy else 0.01)
 
     def submit(self, prompt_tokens, max_tokens: int) -> Request:
         with self._lock:
@@ -109,6 +113,7 @@ class EngineService:
                     {"id": i.instance_id, "alive": i.alive,
                      "active": len(i.requests),
                      "queued": len(eng.queues[i.instance_id]),
+                     "prefilling": i.prefill_depth(),
                      "pool_used_blocks": i.pool.n_used,
                      "pool_replica_blocks": i.pool.replica_blocks_used()}
                     for i in eng.instances],
@@ -222,6 +227,10 @@ def main():
                          "--reload-penalty s)")
     ap.add_argument("--rejoin-delay", type=float, default=1.0)
     ap.add_argument("--reload-penalty", type=float, default=20.0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: run prompts through the pool in "
+                         "chunks of this many tokens, interleaved with "
+                         "decode steps (0 = monolithic prefill)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if cfg.n_params() > 3e8:
@@ -233,6 +242,7 @@ def main():
                         auto_rejoin=args.auto_rejoin,
                         rejoin_delay=args.rejoin_delay,
                         reload_penalty=args.reload_penalty,
+                        prefill_chunk=args.prefill_chunk,
                         replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "

@@ -1,0 +1,121 @@
+"""Step-overlapped (async double-buffered) replication: ``_replicate``
+stages this step's dirty block/blob slot ids and the data copies ship at
+the top of the NEXT step, overlapping its compute. The correctness
+contract is the flush barrier: ``flush_replication()`` runs before any
+failover/rejoin touches replicas, so a promoted replica always carries
+the primary's last completed step — byte-identical failover, including
+under windowed block recycling with the int8 pool."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request
+
+
+def _reqs(cfg, n, seed=0, prompt=12, out=20):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt_len=prompt, max_new_tokens=out,
+                    arrival_time=0.0,
+                    prompt_tokens=rng.integers(1, cfg.vocab_size, prompt).tolist())
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3-8b").reduced()
+
+
+def _pairs(eng):
+    """(src_pool, dst_pool, src_slot, dst_slot) for every staged block."""
+    out = []
+    for msg in eng._pending_ship:
+        src = eng.instances[msg["src"]].pool
+        dst = eng.instances[msg["dst"]].pool
+        for s, d in zip(*msg["blocks"]):
+            out.append((src, dst, s, d))
+    return out
+
+
+def test_async_stages_then_flush_lands_bytes(cfg):
+    """After one step the delta is STAGED, not shipped: the hosted blocks
+    (freshly allocated, so still zeroed) don't yet hold the primary's
+    pages, while the metadata/accounting already happened at stage time.
+    flush_replication() then lands exactly the primary's bytes."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64),
+                     n_instances=2, seed=0)
+    for r in _reqs(cfg, 4):
+        eng.submit(r)
+    eng.step()
+    assert eng.ecfg.repl_async
+    pairs = _pairs(eng)
+    assert pairs, "prompt pages must be staged on the first pass"
+    assert eng.repl_blocks_total == len(pairs)      # accounted at stage time
+    for src, dst, s, d in pairs:
+        for a in dst.read_block(d):
+            assert not np.asarray(a).any(), \
+            "bytes must not ship before the flush barrier"
+    eng.flush_replication()
+    assert not eng._pending_ship
+    for src, dst, s, d in pairs:
+        for a, b in zip(src.read_block(s), dst.read_block(d)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sync_mode_ships_in_step(cfg):
+    """repl_async=False is the synchronous baseline: the copies ship inside
+    ``step()`` and nothing is left pending."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       repl_async=False),
+                     n_instances=2, seed=0)
+    for r in _reqs(cfg, 4):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+        assert not eng._pending_ship
+    src, dst = eng.instances
+    for rid in src.requests:
+        meta = eng.replica_meta[rid]
+        rtab = dst.pool.replica_table(meta["peer"], rid)
+        for ref, rref in zip(src.pool.table(rid), rtab):
+            for a, b in zip(src.pool.read_block(ref.slot),
+                            dst.pool.read_block(rref.slot)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_flush_before_promote_byte_identical(cfg, kv_quant):
+    """Kill an instance at a moment when a staged-but-unshipped delta is
+    pending: fail_instance's flush barrier must land it before promotion,
+    keeping the token streams byte-identical to a failure-free run —
+    under windowed recycling (retires in flight) and the int8 pool."""
+    wcfg = dataclasses.replace(cfg, sliding_window=16)
+
+    def run(fail_at):
+        eng = RealEngine(wcfg, EngineConfig(max_slots=4, max_seq=96,
+                                            kv_quant=kv_quant),
+                         n_instances=2, seed=0)
+        reqs = _reqs(wcfg, 4, prompt=10, out=40)
+        for r in reqs:
+            eng.submit(r)
+        steps = 0
+        while eng.has_pending() and steps < 1000:
+            eng.step()
+            steps += 1
+            if fail_at is not None and steps == fail_at:
+                # well past the 16-token window -> retires have been flowing
+                assert eng._pending_ship, \
+                    "kill must land with a staged, unshipped delta"
+                victims = list(eng.instances[0].requests)
+                resumed = eng.fail_instance(0)
+                assert set(resumed) == set(victims)
+        return reqs
+
+    normal = run(None)
+    failed = run(25)
+    assert any(r.n_migrations for r in failed)
+    for rf, rn in zip(failed, normal):
+        assert rf.output_tokens == rn.output_tokens
+    assert all(r.n_retries == 0 for r in failed)

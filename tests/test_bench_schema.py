@@ -23,10 +23,13 @@ def _mode(mttr, ttft_p99=0.5):
 def _valid_latency():
     fams = {}
     for fam in ("dense", "moe", "hybrid"):
+        kf = _mode(0.2, ttft_p99=0.4)
+        kf["sweeps"] = {"tpot_ms_vs_active_slots": {"1": 5.0, "2": 6.0},
+                        "ttft_s_vs_prompt_bucket": {"8": 0.02, "16": 0.04}}
         fams[fam] = {"arch": fam,
-                     "kevlarflow": _mode(0.2, ttft_p99=0.4),
+                     "kevlarflow": kf,
                      "standard": _mode(4.0, ttft_p99=1.6),
-                     "ratios": {"mttr_x": 20.0}}
+                     "ratios": {"mttr_x": 20.0, "goodput_tok_x": 1.3}}
     return {"meta": {"profile": "tiny"}, "families": fams}
 
 
@@ -77,6 +80,29 @@ def test_kevlarflow_regression_flagged(tmp_path):
     payload["families"]["dense"]["kevlarflow"]["ttft_p99"] = 1.6  # tie
     problems = _check(tmp_path, payload)
     assert any("ttft_p99" in p for p in problems)
+
+
+def test_goodput_below_one_flagged(tmp_path):
+    """The ROADMAP exit criterion is gated: resilience must not cost
+    steady-state goodput (goodput_tok_x >= 1.0 per family)."""
+    payload = _valid_latency()
+    payload["families"]["dense"]["ratios"]["goodput_tok_x"] = 0.52
+    assert any("gate is >= 1.0" in p for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    del payload["families"]["moe"]["ratios"]["goodput_tok_x"]
+    assert any("goodput_tok_x" in p for p in _check(tmp_path, payload))
+
+
+def test_missing_sweeps_flagged(tmp_path):
+    """Each kevlarflow section must carry the chunked-prefill CI sweeps."""
+    payload = _valid_latency()
+    del payload["families"]["hybrid"]["kevlarflow"]["sweeps"]
+    assert any("sweeps" in p for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    payload["families"]["dense"]["kevlarflow"]["sweeps"][
+        "tpot_ms_vs_active_slots"] = {}
+    assert any("tpot_ms_vs_active_slots" in p
+               for p in _check(tmp_path, payload))
 
 
 def test_zero_completions_flagged(tmp_path):

@@ -14,12 +14,17 @@ Checks, per file:
   * per family: ``kevlarflow`` and ``standard`` sections, each carrying
     every headline metric as a finite number, n > 0, and a measured MTTR;
   * per family: kevlarflow STRICTLY better than standard on MTTR and p99
-    TTFT (the reproduction's acceptance bar), ratios section present.
+    TTFT (the reproduction's acceptance bar), ratios section present;
+  * per family: ``goodput_tok_x >= 1.0`` — resilience must not cost
+    steady-state goodput (ROADMAP open item 1's exit criterion) — and the
+    kevlarflow run's TPOT/TTFT sweep sections present and well-formed.
 
 ``BENCH_paged.json``
   * replication-traffic sections for all three archs with full/delta/int8
     modes and a delta reduction factor > 1;
-  * ``int8`` byte-reduction and ``recycling`` residency sections.
+  * ``int8`` byte-reduction and ``recycling`` residency sections;
+  * ``repl_overlap`` sync/async/off replication ms-per-step (presence and
+    positivity only — wall-clock ratios are too noisy to gate on).
 
 Exit status 0 = clean; 1 = problems (each printed one per line).
 
@@ -89,6 +94,26 @@ def check_latency(path: str, problems: list):
                     f"strictly better than standard ({std[key]:.3f})")
         if "ratios" not in per:
             problems.append(f"{name}: {fam}.ratios missing")
+        else:
+            # ROADMAP open item 1 exit criterion: resilience at no goodput
+            # cost — kevlarflow tok/s must be >= standard per family
+            gx = per["ratios"].get("goodput_tok_x")
+            if not _num(gx):
+                problems.append(
+                    f"{name}: {fam}.ratios.goodput_tok_x not a finite "
+                    f"number: {gx!r}")
+            elif gx < 1.0:
+                problems.append(
+                    f"{name}: {fam}: kevlarflow goodput {gx}x standard — "
+                    "resilience is not overhead-free (gate is >= 1.0)")
+        sweeps = kf.get("sweeps", {})
+        for sweep in ("tpot_ms_vs_active_slots", "ttft_s_vs_prompt_bucket"):
+            pts = sweeps.get(sweep)
+            if not isinstance(pts, dict) or not pts or \
+                    not all(_num(v) and v > 0 for v in pts.values()):
+                problems.append(
+                    f"{name}: {fam}.kevlarflow.sweeps.{sweep} missing or "
+                    "malformed")
 
 
 def check_paged(path: str, problems: list):
@@ -127,6 +152,19 @@ def check_paged(path: str, problems: list):
             problems.append(
                 f"{name}: int8.{arch}: quantized replication not smaller "
                 f"than bf16 ({sec.get('bytes_reduction_x')!r})")
+    overlap = data.get("repl_overlap")
+    if not isinstance(overlap, dict) or not overlap:
+        problems.append(f"{name}: repl_overlap section missing")
+    else:
+        for key in ("sync_ms_per_step", "async_ms_per_step",
+                    "off_ms_per_step"):
+            if not _num(overlap.get(key)) or overlap[key] <= 0:
+                problems.append(
+                    f"{name}: repl_overlap.{key} not a positive number: "
+                    f"{overlap.get(key)!r}")
+        # no timing-ratio assertion here — CI boxes are too noisy for a
+        # strict sync>async gate; the goodput_tok_x gate above is the
+        # end-to-end check that overlap actually pays off
     recycling = data.get("recycling", {})
     if not recycling:
         problems.append(f"{name}: recycling section missing")
