@@ -160,6 +160,92 @@ def repl_overlap(arch: str = "llama3-8b", n_requests: int = 6,
     }
 
 
+PREFIX_HEADER = ("bench,arch,frac,cache,hit_rate,compute_tokens,"
+                 "total_tokens,repl_bytes_total,ship_ratio")
+
+
+def prefix_traffic(frac: float, prefix_cache: bool = True,
+                   arch: str = "llama3-8b", n_requests: int = 20,
+                   prompt: int = 104, prefix_len: int = 96, out: int = 3,
+                   chunk: int = 32, gap: int = 2):
+    """Serve a shared-prefix workload on the real paged engine and read the
+    prefix-cache + replication counters.
+
+    ``frac`` of the requests open with the same 96-token preamble (12 full
+    pages at page_size 8); arrivals trickle in one every ``gap`` steps —
+    temporally spread traffic, the serving regime where a warm cache pays
+    off (a thundering herd admits everything before the first prompt
+    finishes prefill and interns its pages)."""
+    from repro.configs import get_config
+    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.request import Request
+    from repro.serving.workload import attach_prompt_tokens
+
+    cfg = get_config(arch).reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=128,
+                                       prefill_chunk=chunk,
+                                       replication="delta",
+                                       prefix_cache=prefix_cache),
+                     n_instances=2, seed=0)
+    reqs = [Request(rid=i, prompt_len=prompt, max_new_tokens=out,
+                    arrival_time=float(i * gap)) for i in range(n_requests)]
+    attach_prompt_tokens(reqs, cfg.vocab_size, shared_prefix_frac=frac,
+                         prefix_len=prefix_len, seed=1)
+    it = iter(reqs)
+    r, tick = True, 0
+    for _ in range(6000):
+        if tick == 0:
+            r = next(it, None)
+            if r is not None:
+                eng.submit(r)
+            tick = gap
+        tick -= 1
+        eng.step()
+        if r is None and not eng.has_pending():
+            break
+    assert not eng.has_pending()
+    ps = eng.prefix_stats()
+    rs = eng.replication_stats()
+    return {
+        "shared_prefix_frac": frac,
+        "prefix_cache": prefix_cache,
+        "hit_rate": ps["hit_rate"],
+        "prefill_total_tokens": ps["prefill_total_tokens"],
+        "prefill_compute_tokens": ps["prefill_compute_tokens"],
+        "prefix_cached_tokens": ps["prefix_cached_tokens"],
+        "cow_copies": ps["cow_copies"],
+        "shared_replica_refs": ps["shared_replica_refs"],
+        "shared_replica_copies": ps["shared_replica_copies"],
+        "shared_page_ship_ratio": ps["shared_page_ship_ratio"],
+        "repl_bytes_total": rs["bytes_total"],
+        "repl_blocks_total": rs["blocks_total"],
+    }
+
+
+def prefix_sweep(arch: str = "llama3-8b", fracs=(0.0, 0.5, 0.8)):
+    """Hit-rate sweep over shared-prefix fractions, plus the cache-off
+    baseline at the top fraction: the headline is how much prefill compute
+    and replication traffic an 80%-shared workload saves."""
+    sweep = {str(f): prefix_traffic(f) for f in fracs}
+    top = str(max(fracs))
+    base = prefix_traffic(max(fracs), prefix_cache=False)
+    hot = sweep[top]
+    return {
+        "arch": arch,
+        "n_requests": 20,
+        "prompt_tokens": 104,
+        "prefix_tokens": 96,
+        "sweep": sweep,
+        "baseline_no_cache": base,
+        "compute_reduction_x": round(
+            base["prefill_compute_tokens"] /
+            max(hot["prefill_compute_tokens"], 1), 2),
+        "repl_bytes_reduction_x": round(
+            base["repl_bytes_total"] / max(hot["repl_bytes_total"], 1), 2),
+        "shared_page_ship_ratio": hot["shared_page_ship_ratio"],
+    }
+
+
 # sliding-window archs (reduced window = 64): serve to 2x the window and
 # measure what recycling buys — resident blocks per request stay bounded by
 # ceil(window/page)+1 while the sequence runs arbitrarily past the window
@@ -296,7 +382,33 @@ def main(fast: bool = True):
                              round(s["blocks_per_request_step"], 3)))
     update_bench_json("recycling", recycling)
     emit(rrows, RECYCLING_HEADER)
-    return rows + trows + rrows
+
+    # shared-prefix caching: hit-rate sweep + cache-off baseline
+    prows = run_prefix()
+    return rows + trows + rrows + prows
+
+
+def run_prefix():
+    """The --prefix mode (also part of main/bench-smoke): shared-prefix
+    hit-rate sweep + the 80%-shared headline reductions."""
+    section = prefix_sweep()
+    update_bench_json("prefix", section)
+    prows = []
+    for frac, s in list(section["sweep"].items()) + \
+            [("baseline", section["baseline_no_cache"])]:
+        prows.append(fmt_row("prefix", section["arch"], frac,
+                             s["prefix_cache"], round(s["hit_rate"], 3),
+                             s["prefill_compute_tokens"],
+                             s["prefill_total_tokens"],
+                             s["repl_bytes_total"],
+                             round(s["shared_page_ship_ratio"], 3)))
+    emit(prows, PREFIX_HEADER)
+    emit([fmt_row("prefix_headline", section["arch"], 0.8, True,
+                  section["compute_reduction_x"],
+                  section["repl_bytes_reduction_x"],
+                  section["shared_page_ship_ratio"], "-", "-")],
+         "bench,arch,frac,cache,compute_red_x,repl_red_x,ship_ratio,-,-")
+    return prows
 
 
 if __name__ == "__main__":
@@ -306,4 +418,10 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke mode: representative RPS points only "
                          "(the real-engine traffic sections run the same)")
-    main(fast=ap.parse_args().fast)
+    ap.add_argument("--prefix", action="store_true",
+                    help="run only the shared-prefix caching sweep")
+    args = ap.parse_args()
+    if args.prefix:
+        run_prefix()
+    else:
+        main(fast=args.fast)

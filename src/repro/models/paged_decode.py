@@ -137,6 +137,31 @@ def init_chunk_buffers(cfg, bucket: int):
     return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
 
 
+def seed_chunk_buffers(k_buf, v_buf, k_pages, v_pages, slots):
+    """Seed the leading rows of chunked-prefill carry buffers from cached
+    pool pages (prefix-cache resume): ``slots`` are the shared page slots
+    covering buffer rows [0, len(slots)*page). Bitwise-exact only when the
+    pool stores KV in the buffers' activation dtype (the engine's
+    ``prefix_skip_compute`` gate); rows past the cached run stay zero and
+    are recomputed by the resumed chunks before any query attends them."""
+    if not slots:
+        return k_buf, v_buf
+    idx = jnp.asarray(slots, jnp.int32)
+    return (_seed_chunk_buf(k_buf, k_pages, idx),
+            _seed_chunk_buf(v_buf, v_pages, idx))
+
+
+@jax.jit
+def _seed_chunk_buf(buf, pages, idx):
+    # (L, K, P, page, D) pool pages -> (L, n*page, K, D) buffer rows; the
+    # gather+transpose+update fuses into one program per distinct page
+    # count (shared-prefix lengths are few, so the jit cache stays small)
+    g = pages[:, :, idx]                        # (L, K, n, page, D)
+    l, k, n, p, d = g.shape
+    rows = g.transpose(0, 2, 3, 1, 4).reshape(l, n * p, k, d)
+    return buf.at[:, :n * p].set(rows.astype(buf.dtype))
+
+
 def init_hybrid_chunk_state(cfg, batch: int = 1):
     """Fresh per-rglru-layer carry state for a chunked hybrid prefill.
     Zeros make the first chunk's resume path exactly equivalent to a fresh

@@ -93,6 +93,15 @@ class EngineConfig:
     # pass. 0 = monolithic admission (prefill inline at admit time), which
     # is the exact pre-chunking code path.
     prefill_chunk: int = 0
+    # prefix caching: fully-covered prompt pages are content-hashed
+    # (token ids + arch + kv dtype chain key), interned in the pool's
+    # prefix index, and attached by reference on admission — the longest
+    # cached page-aligned prefix costs no fresh pages, no prefill compute
+    # (chunked prefill resumes from the first uncached token when the
+    # page bytes are bitwise-exact for the activation dtype), and no
+    # replication bytes beyond one ship per (ring target, page). Writes
+    # landing on a shared page copy-on-write to a private slot first.
+    prefix_cache: bool = False
     # async double-buffered replication: _replicate STAGES the step's dirty
     # block/blob ids (metadata only) and the data copies ship at the top of
     # the NEXT step, overlapped with that step's compute. flush_replication
@@ -205,7 +214,13 @@ class RealInstance:
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, real=True,
             dtype=PD.kv_dtype(cfg), blob_words=blob_words,
             n_blobs=(2 * B + 1) if blob_words else 0,
-            window=self.window, quantized=ecfg.kv_quant)
+            window=self.window, quantized=ecfg.kv_quant,
+            prefix_cache=ecfg.prefix_cache,
+            # chain-hash identity: a page is only reusable under the same
+            # model AND the same on-page byte representation
+            arch_key=f"{cfg.name}|{cfg.arch_type}"
+                     f"|{jnp.dtype(PD.kv_dtype(cfg)).name}"
+                     f"|q{int(ecfg.kv_quant)}")
         # idle batch slots write/attend into one scratch block, never freed
         self.scratch = self.pool.allocate(SCRATCH_RID, 1)[0].slot
         self.block_table = np.full((B, self.pages_per_seq), self.scratch,
@@ -236,6 +251,22 @@ class RealInstance:
         self.chunk = ex.chunk
         # slot -> in-flight chunked-prefill job (PREFILL-state requests)
         self.prefill_jobs: Dict[int, dict] = {}
+        # prefix-cache accounting (prefix_stats aggregates across instances)
+        self.prefill_total_tokens = 0
+        self.prefill_compute_tokens = 0
+        self.prefix_cached_tokens = 0
+        # compute-skip eligibility: chunked prefill can resume from the
+        # first uncached token only when seeding the chunk buffers from
+        # cached pool pages is bitwise-lossless — pages must store exactly
+        # the activation dtype (no int8 quantization) and the family must
+        # carry no cross-page recurrent state (hybrid RG-LRU summarizes the
+        # whole prefix). Ineligible configs still share pages — they
+        # recompute the full prompt but skip the writes to shared pages
+        # (deterministic recompute reproduces the interned bytes).
+        self.prefix_skip_compute = (
+            ecfg.prefix_cache and self.chunk > 0
+            and self.family != "hybrid" and not ecfg.kv_quant
+            and jnp.dtype(cfg.dtype) == jnp.dtype(PD.kv_dtype(cfg)))
 
     def _stamp(self, now: float) -> float:
         """Timestamp an event: fresh wall-clock reading when a clock is
@@ -246,20 +277,34 @@ class RealInstance:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_rid) if r < 0]
 
-    def _allocate(self, rid: int, n_tokens: int):
+    def _allocate(self, rid: int, n_tokens: int, token_ids=None):
         """Allocate primary blocks (and, for hybrid, the state blob),
         evicting hosted replicas under pressure (the paper's rule: replicas
         are the first thing dropped)."""
         need = self.pool.resident_blocks_for(n_tokens)
+        protect = ()
+        if self.ecfg.prefix_cache and token_ids is not None \
+                and not self.pool.window:
+            # pressure estimate: pages the prefix cache will cover cost no
+            # fresh slots — don't evict failover state to make room for them
+            matched, partial = self.pool.match_prefix(
+                token_ids[:n_tokens], peek=True)
+            need -= len(matched) + (1 if partial else 0)
+            protect = {e.key for e in matched}
+            if partial:
+                protect.add(partial[0].key)
         if need > self.pool.n_free and not self.pool.window:
             # unwindowed pools raise without evicting. Windowed pools get
             # the cheaper remedy first: allocate's own fallback recycles
             # live requests' out-of-window head pages and only then evicts
             # hosted replicas — pre-evicting here would drop peers'
-            # failover state that recycling could have kept.
-            self.pool.evict_replicas_for_pressure(need)
+            # failover state that recycling could have kept. Warm
+            # refcount-0 prefix pages are pure cache: reclaim them first.
+            self.pool.evict_cached_prefixes(need, protect=protect)
+            if need > self.pool.n_free:
+                self.pool.evict_replicas_for_pressure(need)
         try:
-            refs = self.pool.allocate(rid, n_tokens)
+            refs = self.pool.allocate(rid, n_tokens, token_ids=token_ids)
         finally:
             # allocate's windowed fallback may have recycled other
             # requests' out-of-window head pages — even on a failed
@@ -284,11 +329,32 @@ class RealInstance:
         slot = slots[0]
         n = req.prompt_len
         try:                           # reserve blocks BEFORE prefill so a
-            refs = self._allocate(req.rid, n)   # full pool costs no compute
+            refs = self._allocate(     # full pool costs no compute
+                req.rid, n, token_ids=req.prompt_tokens)
         except MemoryError:
             return False
+        # prefix-cache hit accounting: tokens covered by interned pages
+        # attached during allocation (0 when the cache is off or cold)
+        cached = self.pool.prefix_hits_by_rid.pop(req.rid, 0) \
+            if self.ecfg.prefix_cache else 0
+        self.prefill_total_tokens += n
+        self.prefix_cached_tokens += cached
+        page = self.pool.page_size
+        # write plan over the cached run: fully-covered shared pages are
+        # never written; a shared page the prompt diverges INSIDE is CoW'd
+        # to a private slot and rewritten (cow_page); a shared page the
+        # prompt merely ends inside is kept shared (rows past the prompt
+        # are masked by seq_lens)
+        skip_pages, cow_page = 0, -1
+        if cached:
+            skip_pages = cached // page
+            if cached % page:
+                if n > cached:
+                    cow_page = skip_pages
+                else:
+                    skip_pages += 1
         req.admit_time = self._stamp(now)       # prefill starts now
-        bucket = PD.next_bucket(n, lo=self.pool.page_size)
+        bucket = PD.next_bucket(n, lo=page)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt_tokens
         req.instance_id = self.instance_id
@@ -300,10 +366,23 @@ class RealInstance:
             # batch never stalls on a whole-prompt forward pass
             req.state = RequestState.PREFILL
             k_buf, v_buf = PD.init_chunk_buffers(self.cfg, bucket)
+            done = 0
+            if cached and self.prefix_skip_compute:
+                # resume from the first uncached token, floored to a chunk
+                # boundary; the final chunk always runs (its logits sample
+                # the first token), so resume stays < n
+                c = min(self.chunk, bucket)
+                done = (min(cached, n - 1) // c) * c
+                if done:
+                    seed_slots = [r.slot
+                                  for r in refs[:-(-cached // page)]]
+                    k_buf, v_buf = PD.seed_chunk_buffers(
+                        k_buf, v_buf, self.pool.k, self.pool.v, seed_slots)
             self.prefill_jobs[slot] = {
                 "req": req, "refs": refs, "toks": toks, "bucket": bucket,
-                "done": 0, "pages_written": 0, "k_buf": k_buf,
-                "v_buf": v_buf,
+                "done": done, "pages_written": skip_pages if cow_page < 0
+                else cow_page,
+                "cow_page": cow_page, "k_buf": k_buf, "v_buf": v_buf,
                 "rstates": PD.init_hybrid_chunk_state(self.cfg)
                 if self.family == "hybrid" else None,
             }
@@ -317,19 +396,32 @@ class RealInstance:
         else:
             logits, k_seq, v_seq = self._prefill(
                 self.params, jnp.asarray(toks), jnp.int32(n))
+        self.prefill_compute_tokens += n   # monolithic: always full compute
         # windowed archs: only the window-covering tail pages were allocated
-        # (refs[0].logical_idx > 0 for long prompts) — write just those
+        # (refs[0].logical_idx > 0 for long prompts) — write just those.
+        # Shared prefix pages (lo > 0) already hold these exact bytes and
+        # are never written in place; the diverging page goes private first
         first_page = refs[0].logical_idx
-        span = first_page * self.pool.page_size
-        self.pool.write_blocks([r.slot for r in refs],
-                               *PD.pack_pages(k_seq[:, span:], v_seq[:, span:],
-                                              len(refs), self.pool.page_size))
+        lo = skip_pages if cow_page < 0 else cow_page
+        if cow_page >= 0:
+            self.pool.ensure_private(req.rid, cow_page)
+        if lo < len(refs):
+            span = (first_page + lo) * page
+            self.pool.write_blocks(
+                [r.slot for r in refs[lo:]],
+                *PD.pack_pages(k_seq[:, span:], v_seq[:, span:],
+                               len(refs) - lo, page))
         self._seat(slot, req, refs, logits, now)
         return True
 
     def _seat(self, slot: int, req: Request, refs, logits, now: float):
         """Shared admission tail: point the slot at its pages, sample the
         prompt's first token, and flip the request to DECODE."""
+        if self.ecfg.prefix_cache and req.prompt_tokens is not None:
+            # prefill wrote every prompt page: publish the fully-covered
+            # ones into the prefix index (no-op pages already shared)
+            self.pool.intern_prefix(req.rid,
+                                    req.prompt_tokens[:req.prompt_len])
         row = np.full(self.pages_per_seq, self.scratch, np.int32)
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
@@ -388,6 +480,7 @@ class RealInstance:
                     jnp.int32(take), job["k_buf"], job["v_buf"])
                 blob = None
             job["done"] = c0 + take
+            self.prefill_compute_tokens += take
             req.prefill_progress = job["done"] / n
             ran += 1
             final = job["done"] >= n
@@ -417,6 +510,14 @@ class RealInstance:
         lo = job["pages_written"]
         if ready <= lo:
             return
+        cow = job.get("cow_page", -1)
+        if 0 <= cow < ready:
+            # this batch writes into a shared page the prompt diverges
+            # inside: copy-on-write to a private slot before the write
+            # lands (the interned page is never mutated in place)
+            self.pool.ensure_private(job["req"].rid,
+                                     refs[cow].logical_idx)
+            job["cow_page"] = -1
         kv_dt = PD.kv_dtype(self.cfg)
         span0 = (first_page + lo) * page
         span1 = (first_page + ready) * page
@@ -651,6 +752,12 @@ class RealEngine:
         # sliding-window recycling: retire messages sent to replica hosts
         # (metadata-only — a retire carries no KV payload)
         self.retire_msgs_total = 0
+        # shared-page replication: a prefix page ships AT MOST ONCE per
+        # (ring target, chain key); later requests referencing it on the
+        # same target add a refcount, not bytes
+        self.repl_shared_refs_total = 0
+        self.repl_shared_copies_total = 0
+        self._shared_hosted_keys: set = set()   # distinct (target, key)
         # (n_active_slots, wall_seconds) per decode step — bench_latency
         # aggregates these into its TPOT-vs-active-slots sweep
         self.step_samples: List[tuple] = []
@@ -861,20 +968,53 @@ class RealEngine:
                         self.instances[meta["home"]].alive:
                     self.instances[meta["home"]].pool.drop_replica(
                         meta["peer"], rid)
+                pc = self.ecfg.prefix_cache
                 table = inst.pool.table(rid)
                 rtab = tgt.pool.replica_table(inst.instance_id, rid)
                 # retires keep the hosted table in lockstep with the live
                 # window; if it ever drifts (e.g. the ring target changed
-                # after a failure), drop it and re-host the current window
+                # after a failure, or copy-on-write turned a shared page
+                # private since hosting), drop it and re-host the current
+                # window with matching sharedness
                 if any(a.logical_idx != b.logical_idx
+                       or (pc and inst.pool.prefix_key_of(a.slot)
+                           != tgt.pool.prefix_key_of(b.slot))
                        for a, b in zip(table, rtab)):
                     tgt.pool.drop_replica(inst.instance_id, rid)
                     rtab = []
-                need = len(table) - len(rtab)
-                if need > 0:
-                    first_logical = table[len(rtab)].logical_idx
-                    if not tgt.pool.host_replica(inst.instance_id, rid, need,
-                                                 first_logical=first_logical):
+                if len(table) > len(rtab):
+                    hosted_ok = True
+                    for ref in table[len(rtab):]:
+                        key = inst.pool.prefix_key_of(ref.slot) if pc \
+                            else None
+                        if key is not None:
+                            # shared prefix page: the target interns it in
+                            # ITS OWN prefix index keyed by chain hash —
+                            # bytes ship only if no page with this key is
+                            # already resident there (at most once per
+                            # target, however many requests reference it)
+                            res = tgt.pool.host_shared_block(
+                                inst.instance_id, rid,
+                                inst.pool.prefix_index[key],
+                                ref.logical_idx)
+                            if res is None:
+                                hosted_ok = False
+                                break
+                            rref, needs_copy = res
+                            self.repl_shared_refs_total += 1
+                            self._shared_hosted_keys.add((tgt_id, key))
+                            if needs_copy:
+                                src_slots.append(ref.slot)
+                                dst_slots.append(rref.slot)
+                                self.repl_shared_copies_total += 1
+                            ref.replicated = True
+                            rref.replicated = True
+                        elif not tgt.pool.host_replica(
+                                inst.instance_id, rid, 1,
+                                first_logical=ref.logical_idx):
+                            hosted_ok = False
+                            break
+                    if not hosted_ok:
                         continue       # no headroom on target; retry next pass
                     rtab = tgt.pool.replica_table(inst.instance_id, rid)
                 bref = inst.pool.blob_ref(rid)
@@ -885,6 +1025,11 @@ class RealEngine:
                         continue       # KV without state can't be resumed
                     rbref = tgt.pool.blob_replica_ref(inst.instance_id, rid)
                 for ref, rref in zip(table, rtab):
+                    # immutable shared pages shipped at host time (at most
+                    # once per target) — never per referencing request,
+                    # even in full mode
+                    if pc and tgt.pool.prefix_key_of(rref.slot) is not None:
+                        continue
                     # copy when the primary block is dirty OR the hosted
                     # block has never received content (rref.replicated
                     # False on fresh hosting — incl. re-hosting after a
@@ -933,6 +1078,36 @@ class RealEngine:
             "retire_msgs_total": self.retire_msgs_total,
             "retires_per_request_step":
                 self.retire_msgs_total / max(self.active_request_steps, 1),
+        }
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache effectiveness (bench_overhead's prefix section):
+        hit rate over admitted prompt tokens, prefill compute actually run,
+        CoW/eviction churn, and the shared-page replication dedup ratio
+        (staged copies per distinct (target, chain key) hosting — 1.0
+        means every shared page shipped exactly once per target)."""
+        insts = self.instances
+        total = sum(i.prefill_total_tokens for i in insts)
+        compute = sum(i.prefill_compute_tokens for i in insts)
+        cached = sum(i.prefix_cached_tokens for i in insts)
+        return {
+            "enabled": self.ecfg.prefix_cache,
+            "prefill_total_tokens": total,
+            "prefill_compute_tokens": compute,
+            "prefix_cached_tokens": cached,
+            "hit_rate": cached / max(total, 1),
+            "lookups": sum(i.pool.prefix_lookups for i in insts),
+            "interned_pages":
+                sum(i.pool.prefix_interned_pages for i in insts),
+            "hosted_pages": sum(i.pool.prefix_hosted_pages for i in insts),
+            "evicted_pages":
+                sum(i.pool.prefix_evicted_pages for i in insts),
+            "cow_copies": sum(i.pool.cow_copies for i in insts),
+            "shared_replica_refs": self.repl_shared_refs_total,
+            "shared_replica_copies": self.repl_shared_copies_total,
+            "shared_page_ship_ratio":
+                self.repl_shared_copies_total
+                / max(len(self._shared_hosted_keys), 1),
         }
 
     def fail_instance(self, instance_id: int) -> List[int]:

@@ -12,7 +12,8 @@ is what the tests assert.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 try:  # real-buffer mode is optional (sim benchmarks never touch jax)
@@ -38,6 +39,28 @@ class BlockRef:
     kind: str = "kv"           # "kv" (paged KV block) | "blob" (opaque state)
 
 
+PREFIX_ROOT = b"root"
+
+
+@dataclasses.dataclass
+class PrefixPage:
+    """One interned, content-addressed, immutable prefix page.
+
+    ``key`` is a chain hash H(arch_key, parent_key, page token ids), so a
+    page is only reusable under the exact same preceding context AND the
+    exact same model/dtype identity. ``refcount`` counts every live
+    BlockRef (primary *and* hosted-replica tables) pointing at ``slot``;
+    a page at refcount 0 stays cached (warm) until LRU pressure eviction.
+    """
+    key: bytes
+    parent: bytes                    # chain key of the previous page
+    tokens: Tuple[int, ...]          # this page's token ids (partial match)
+    slot: int
+    logical_idx: int                 # absolute page index in the chain
+    refcount: int = 0
+    lru: int = 0                     # last-touch tick (eviction order)
+
+
 class PagedKVPool:
     """Fixed-size pool of KV blocks with a free list.
 
@@ -53,7 +76,8 @@ class PagedKVPool:
     def __init__(self, n_blocks: int, page_size: int, n_layers: int = 0,
                  n_kv_heads: int = 0, head_dim: int = 0, real: bool = False,
                  dtype="bfloat16", blob_words: int = 0, n_blobs: int = 0,
-                 window: int = 0, quantized: bool = False):
+                 window: int = 0, quantized: bool = False,
+                 prefix_cache: bool = False, arch_key: str = ""):
         self.n_blocks = n_blocks
         self.page_size = page_size
         self.real = real
@@ -87,6 +111,24 @@ class PagedKVPool:
         self._blob_free: List[int] = list(range(n_blobs))
         self._blob_refs: Dict[int, BlockRef] = {}         # rid -> blob
         self._blob_replicas: Dict[Tuple[int, int], BlockRef] = {}
+        # prefix cache: fully-covered prompt pages interned by chain hash.
+        # ``prefix_index`` maps chain key -> PrefixPage; ``_slot_prefix``
+        # is the reverse slot -> key map (a slot is interned iff present);
+        # ``_prefix_children`` maps parent key -> child keys so the last
+        # (diverging) page of a lookup can still be partially matched.
+        self.prefix_cache = prefix_cache
+        self.arch_key = arch_key
+        self.prefix_index: Dict[bytes, PrefixPage] = {}
+        self._slot_prefix: Dict[int, bytes] = {}
+        self._prefix_children: Dict[bytes, List[bytes]] = {}
+        self._lru_tick = 0
+        self.prefix_lookups = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_hits_by_rid: Dict[int, int] = {}   # per-admission hits
+        self.prefix_interned_pages = 0
+        self.prefix_hosted_pages = 0     # interned via shared replication
+        self.prefix_evicted_pages = 0
+        self.cow_copies = 0
         # scale side arrays exist only on quantized pools; None placeholders
         # let callers pass pool.k_scale etc. uniformly
         self.k_scale = self.v_scale = self.blob_scales = None
@@ -175,7 +217,8 @@ class PagedKVPool:
     def can_allocate(self, n_tokens: int) -> bool:
         return self.n_free >= self.resident_blocks_for(n_tokens)
 
-    def allocate(self, rid: int, n_tokens: int) -> List[BlockRef]:
+    def allocate(self, rid: int, n_tokens: int,
+                 token_ids: Optional[Sequence[int]] = None) -> List[BlockRef]:
         """Allocate blocks; raises MemoryError if full (caller should evict
         replicas first — the paper's pressure rule).
 
@@ -184,8 +227,15 @@ class PagedKVPool:
         position are resident — logical indices start at the window's first
         page, not 0 (the recycled prefix is never materialized).
         Existing rid: appends blocks for n_tokens MORE tokens.
+
+        With ``prefix_cache`` on and ``token_ids`` given for a fresh rid
+        whose whole prompt is resident, the longest interned prefix chain
+        is attached by reference (refcount++) instead of popping fresh
+        slots — only uncovered pages consume the free list.
         """
         table = self._tables.get(rid)
+        shared: List[Tuple[PrefixPage, int]] = []   # (entry, tokens covered)
+        protect: Iterable[bytes] = ()
         if table:
             start = table[-1].logical_idx + 1
             need = self.blocks_for_tokens(n_tokens)
@@ -195,6 +245,24 @@ class PagedKVPool:
                      if self.window else 0)
             need = self.resident_blocks_for(n_tokens)
             remaining = n_tokens - start * self.page_size
+            if (self.prefix_cache and token_ids is not None and start == 0
+                    and n_tokens > 0):
+                matched, partial = self.match_prefix(token_ids[:n_tokens])
+                shared = [(e, self.page_size) for e in matched]
+                if partial is not None:
+                    shared.append(partial)
+                protect = {e.key for e, _ in shared}
+                start = len(shared)
+                need -= len(shared)
+                remaining -= len(shared) * self.page_size
+                hits = sum(c for _, c in shared)
+                self.prefix_hit_tokens += hits
+                self.prefix_hits_by_rid[rid] = hits
+        if need > self.n_free and self.prefix_cache:
+            # warm refcount-0 prefix pages are cache, not commitments:
+            # reclaim them (LRU) before touching live state — but never the
+            # chain this very allocation is about to attach
+            self.evict_cached_prefixes(need, protect=protect)
         if need > self.n_free and self.window:
             # windowed pools can be "full" while live requests still hold
             # head pages fully below their attention window: recycle those
@@ -204,16 +272,32 @@ class PagedKVPool:
                 if self.n_free >= need:
                     break
                 self.pending_recycles.extend(self.recycle_out_of_window(r))
+            if need > self.n_free and self.prefix_cache:
+                # recycling may have dropped shared pages to refcount 0 —
+                # they are reclaimable cache now, and cheaper than replicas
+                self.evict_cached_prefixes(need, protect=protect)
             if need > self.n_free:
                 self.evict_replicas_for_pressure(need)
         if need > self.n_free:
             raise MemoryError(f"pool exhausted: need {need}, free {self.n_free}")
         table = self._tables.setdefault(rid, [])
         refs = []
+        for i, (entry, _covered) in enumerate(shared):
+            entry.refcount += 1
+            entry.lru = self._tick()
+            # n_filled is the page's FINAL token count for this prompt (the
+            # pool's n_tokens feeds decode seq_lens) — on a mid-page
+            # divergence the page is CoW'd and rewritten during prefill,
+            # but its logical fill is fixed here
+            ref = BlockRef(rid, i, entry.slot,
+                           n_filled=min(self.page_size,
+                                        n_tokens - i * self.page_size))
+            table.append(ref)
+            refs.append(ref)
         for i in range(need):
             slot = self._free.pop()
             ref = BlockRef(rid, start + i, slot,
-                           n_filled=min(self.page_size, remaining))
+                           n_filled=min(self.page_size, max(0, remaining)))
             remaining -= ref.n_filled
             table.append(ref)
             refs.append(ref)
@@ -227,9 +311,16 @@ class PagedKVPool:
             refs = self.allocate(rid, 1)
             refs[0].n_filled = 1
             return refs[0]
-        table[-1].n_filled += 1
-        table[-1].replicated = False     # block changed; needs re-replication
-        return table[-1]
+        ref = table[-1]
+        if ref.slot in self._slot_prefix:
+            # appending into a partially-filled shared page: copy-on-write
+            # BEFORE mutating any accounting (``_cow`` may raise
+            # MemoryError, and the caller's evict-and-retry must find the
+            # table untouched)
+            ref = self._cow(ref)
+        ref.n_filled += 1
+        ref.replicated = False           # block changed; needs re-replication
+        return ref
 
     def table(self, rid: int) -> List[BlockRef]:
         return self._tables.get(rid, [])
@@ -258,7 +349,7 @@ class PagedKVPool:
         recycled = []
         while table and (table[0].logical_idx + 1) * self.page_size <= min_pos:
             ref = table.pop(0)
-            self._free.append(ref.slot)
+            self._release_slot(ref.slot)
             recycled.append(ref)
         return recycled
 
@@ -270,7 +361,8 @@ class PagedKVPool:
 
     def free(self, rid: int):
         for ref in self._tables.pop(rid, []):
-            self._free.append(ref.slot)
+            self._release_slot(ref.slot)
+        self.prefix_hits_by_rid.pop(rid, None)
         blob = self._blob_refs.pop(rid, None)
         if blob is not None:
             self._blob_free.append(blob.slot)
@@ -350,13 +442,13 @@ class PagedKVPool:
         for i, ref in enumerate(table):
             if ref.logical_idx == logical_idx:
                 table.pop(i)
-                self._free.append(ref.slot)
+                self._release_slot(ref.slot)
                 return True
         return False
 
     def drop_replica(self, peer: int, rid: int):
         for ref in self._replica_tables.pop((peer, rid), []):
-            self._free.append(ref.slot)
+            self._release_slot(ref.slot)
         blob = self._blob_replicas.pop((peer, rid), None)
         if blob is not None:
             self._blob_free.append(blob.slot)
@@ -403,6 +495,225 @@ class PagedKVPool:
         if blob is not None:
             self._blob_refs[rid] = blob
         return refs
+
+    # -- prefix cache (content-addressed immutable prompt pages) -------------
+    def _tick(self) -> int:
+        self._lru_tick += 1
+        return self._lru_tick
+
+    def _release_slot(self, slot: int):
+        """Drop one reference to ``slot``. An interned slot is decref'd and
+        STAYS cached (warm for future lookups, reclaimable at refcount 0);
+        a private slot goes back on the free list. This is the single
+        choke point that keeps recycle/free/retire/drop paths from ever
+        freeing a page the prefix index still owns (the aliasing hazard)."""
+        key = self._slot_prefix.get(slot)
+        if key is None:
+            self._free.append(slot)
+            return
+        entry = self.prefix_index[key]
+        entry.refcount -= 1
+        assert entry.refcount >= 0, "prefix page refcount went negative"
+        entry.lru = self._tick()
+
+    def _page_key(self, parent: bytes, tokens: Tuple[int, ...]) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self.arch_key.encode())
+        h.update(parent)
+        h.update(",".join(str(t) for t in tokens).encode())
+        return h.digest()
+
+    def match_prefix(self, token_ids: Sequence[int], peek: bool = False):
+        """Longest interned page-aligned prefix of ``token_ids``.
+
+        Returns (full, partial): ``full`` is the list of PrefixPage entries
+        covering whole leading pages; ``partial`` is an optional
+        (PrefixPage, n_common) pair when a child of the last matched page
+        shares a sub-page run of tokens with the remainder (the prompt
+        either ends inside that page or diverges mid-page — the CoW case).
+        ``peek`` skips counters/LRU touches (capacity estimation)."""
+        if not peek:
+            self.prefix_lookups += 1
+        matched: List[PrefixPage] = []
+        parent = PREFIX_ROOT
+        n = len(token_ids)
+        for p in range(n // self.page_size):
+            toks = tuple(int(t) for t in
+                         token_ids[p * self.page_size:(p + 1) * self.page_size])
+            entry = self.prefix_index.get(self._page_key(parent, toks))
+            if entry is None:
+                break
+            matched.append(entry)
+            parent = entry.key
+        rest = [int(t) for t in token_ids[len(matched) * self.page_size:n]]
+        partial = None
+        if rest:
+            best, best_n = None, 0
+            for child_key in self._prefix_children.get(parent, ()):
+                child = self.prefix_index.get(child_key)
+                if child is None:
+                    continue
+                m = 0
+                for a, b in zip(child.tokens, rest):
+                    if a != b:
+                        break
+                    m += 1
+                if m > best_n:
+                    best, best_n = child, m
+            if best is not None and best_n > 0:
+                partial = (best, best_n)
+        if not peek:
+            tick = self._tick()
+            for entry in matched:
+                entry.lru = tick
+        return matched, partial
+
+    def prefix_key_of(self, slot: int) -> Optional[bytes]:
+        """Chain key if ``slot`` is interned, else None (private page)."""
+        return self._slot_prefix.get(slot)
+
+    def intern_prefix(self, rid: int, token_ids: Sequence[int]) -> int:
+        """Publish rid's fully-covered prompt pages into the prefix index
+        (called once prefill has written their bytes). Only whole pages
+        starting at logical page 0 are interned — sub-page prefixes are
+        never interned, and a windowed request whose head pages were never
+        materialized publishes nothing. Returns pages newly interned."""
+        if not self.prefix_cache:
+            return 0
+        table = self._tables.get(rid) or []
+        parent = PREFIX_ROOT
+        interned = 0
+        for p in range(min(len(token_ids) // self.page_size, len(table))):
+            ref = table[p]
+            if ref.logical_idx != p or ref.n_filled < self.page_size:
+                break
+            toks = tuple(int(t) for t in
+                         token_ids[p * self.page_size:(p + 1) * self.page_size])
+            key = self._page_key(parent, toks)
+            if ref.slot in self._slot_prefix:
+                # already shared (attached at admission)
+                parent = key
+                continue
+            if key in self.prefix_index:
+                # identical content already published from another slot;
+                # keep rid's private copy, don't double-intern
+                parent = key
+                continue
+            self.prefix_index[key] = PrefixPage(
+                key, parent, toks, ref.slot, p,
+                refcount=1, lru=self._tick())
+            self._slot_prefix[ref.slot] = key
+            self._prefix_children.setdefault(parent, []).append(key)
+            self.prefix_interned_pages += 1
+            interned += 1
+            parent = key
+        return interned
+
+    def ensure_private(self, rid: int, logical_idx: int) -> BlockRef:
+        """Guarantee rid's page ``logical_idx`` is private (copy-on-write
+        if it is currently a shared prefix page). Returns the (possibly
+        re-slotted) BlockRef; prefill calls this before rewriting a
+        partially-covered or diverging page."""
+        for ref in self._tables.get(rid, []):
+            if ref.logical_idx == logical_idx:
+                if ref.slot in self._slot_prefix:
+                    return self._cow(ref)
+                return ref
+        raise KeyError(f"rid {rid} has no page {logical_idx}")
+
+    def _cow(self, ref: BlockRef) -> BlockRef:
+        """Copy-on-write: move ``ref`` onto a fresh private slot carrying a
+        byte copy of the shared page, then drop the shared reference. The
+        interned page itself is never mutated."""
+        old_key = self._slot_prefix[ref.slot]
+        if not self._free:
+            self.evict_cached_prefixes(1, protect={old_key})
+        if not self._free:
+            self.evict_replicas_for_pressure(1)
+        if not self._free:
+            raise MemoryError("pool exhausted during copy-on-write")
+        new_slot = self._free.pop()
+        if self.real:
+            self._clone_slot(ref.slot, new_slot)
+        self._release_slot(ref.slot)     # decref the shared page
+        ref.slot = new_slot
+        ref.replicated = False
+        self.cow_copies += 1
+        return ref
+
+    def _clone_slot(self, src: int, dst: int):
+        """Same-pool page byte copy (CoW). Quantized pools clone the int8
+        payload + scales verbatim, so the private copy is bit-identical."""
+        idx_s = jnp.asarray([src], jnp.int32)
+        idx_d = jnp.asarray([dst], jnp.int32)
+        if self.quantized:
+            (self.k, self.v, self.k_scale, self.v_scale) = _copy_blocks_q(
+                self.k, self.v, self.k_scale, self.v_scale,
+                self.k, self.v, self.k_scale, self.v_scale, idx_s, idx_d)
+        else:
+            self.k, self.v = _copy_blocks(self.k, self.v,
+                                          self.k, self.v, idx_s, idx_d)
+
+    def evict_cached_prefixes(self, blocks_needed: int,
+                              protect: Iterable[bytes] = ()) -> int:
+        """LRU-evict interned pages at refcount == 0 until ``blocks_needed``
+        slots are free. Pages still referenced (refcount > 0) are never
+        touched; ``protect`` shields keys about to be attached."""
+        if not self.prefix_cache:
+            return 0
+        protect = set(protect)
+        victims = sorted((e for e in self.prefix_index.values()
+                          if e.refcount == 0 and e.key not in protect),
+                         key=lambda e: e.lru)
+        freed = 0
+        for entry in victims:
+            if self.n_free >= blocks_needed:
+                break
+            self._evict_prefix_entry(entry)
+            freed += 1
+        return freed
+
+    def _evict_prefix_entry(self, entry: PrefixPage):
+        assert entry.refcount == 0, "evicting a referenced prefix page"
+        del self.prefix_index[entry.key]
+        del self._slot_prefix[entry.slot]
+        kids = self._prefix_children.get(entry.parent)
+        if kids is not None:
+            kids.remove(entry.key)
+            if not kids:
+                del self._prefix_children[entry.parent]
+        self._free.append(entry.slot)
+        self.prefix_evicted_pages += 1
+
+    def host_shared_block(self, peer: int, rid: int, src_entry: PrefixPage,
+                          logical_idx: int):
+        """Host one SHARED page of a peer's request: if a page with the
+        same chain key is already interned here (shipped earlier for
+        another request, or produced by this pool's own traffic), reference
+        it — zero bytes on the wire. Otherwise intern a fresh slot the
+        caller must copy into. Returns (replica BlockRef, needs_copy) or
+        None when there is no headroom."""
+        entry = self.prefix_index.get(src_entry.key)
+        needs_copy = False
+        if entry is None:
+            if not self._free:
+                self.evict_cached_prefixes(1)
+            if not self._free:
+                return None
+            slot = self._free.pop()
+            entry = PrefixPage(src_entry.key, src_entry.parent,
+                               src_entry.tokens, slot, src_entry.logical_idx,
+                               refcount=0, lru=self._tick())
+            self.prefix_index[entry.key] = entry
+            self._slot_prefix[slot] = entry.key
+            self._prefix_children.setdefault(entry.parent, []).append(entry.key)
+            self.prefix_hosted_pages += 1
+            needs_copy = True
+        entry.refcount += 1
+        entry.lru = self._tick()
+        ref = BlockRef(rid, logical_idx, entry.slot, n_filled=self.page_size)
+        self._replica_tables.setdefault((peer, rid), []).append(ref)
+        return ref, needs_copy
 
     # -- real-buffer block IO (used by the real-compute engine + tests) -----
     def write_block(self, slot: int, k_block, v_block):

@@ -122,6 +122,7 @@ class EngineService:
                 "recovery_mode": eng.ecfg.recovery,
                 "failure_events": [dict(e) for e in eng.failure_events],
                 "replication": eng.replication_stats(),
+                "prefix": eng.prefix_stats(),
             }
 
     def shutdown(self):
@@ -231,6 +232,10 @@ def main():
                     help="chunked prefill: run prompts through the pool in "
                          "chunks of this many tokens, interleaved with "
                          "decode steps (0 = monolithic prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="intern fully-covered prompt pages in a refcounted "
+                         "prefix index; shared prefixes attach by reference "
+                         "(copy-on-write) and skip prefill compute")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if cfg.n_params() > 3e8:
@@ -243,6 +248,7 @@ def main():
                         rejoin_delay=args.rejoin_delay,
                         reload_penalty=args.reload_penalty,
                         prefill_chunk=args.prefill_chunk,
+                        prefix_cache=args.prefix_cache,
                         replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "

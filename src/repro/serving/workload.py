@@ -34,6 +34,31 @@ def sharegpt_lengths(rng: np.random.Generator, n: int, *,
             np.clip(output, min_output, max_output).astype(int))
 
 
+def attach_prompt_tokens(requests: List[Request], vocab_size: int, *,
+                         shared_prefix_frac: float = 0.0,
+                         prefix_len: int = 0, seed: int = 0
+                         ) -> List[Request]:
+    """Materialize concrete prompt token ids onto simulator-shaped
+    requests. A ``shared_prefix_frac`` fraction of them (exact count,
+    spread uniformly) open with the SAME ``prefix_len``-token preamble —
+    the shared system prompt / few-shot header that prefix caching interns
+    — while every other prompt (and every tail) is fresh random content.
+    Prompts shorter than the preamble stay fully private. Returns the same
+    request list for chaining."""
+    rng = np.random.default_rng(seed)
+    preamble = rng.integers(1, vocab_size, prefix_len).tolist()
+    n_shared = int(round(shared_prefix_frac * len(requests)))
+    shared = set(rng.permutation(len(requests))[:n_shared].tolist())
+    for i, r in enumerate(requests):
+        n = r.prompt_len
+        if i in shared and prefix_len and n >= prefix_len:
+            tail = rng.integers(1, vocab_size, n - prefix_len).tolist()
+            r.prompt_tokens = preamble + tail
+        else:
+            r.prompt_tokens = rng.integers(1, vocab_size, n).tolist()
+    return requests
+
+
 def poisson_workload(rps: float, duration: float, seed: int = 0,
                      start: float = 0.0, rid_base: int = 0,
                      **length_kw) -> List[Request]:

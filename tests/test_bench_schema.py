@@ -117,6 +117,72 @@ def test_missing_file_flagged(tmp_path):
     assert problems
 
 
+def _valid_prefix():
+    def pt(frac, cache=True, hit=0.0, comp=2080, bytes_=2293760, ship=1.0):
+        return {"shared_prefix_frac": frac, "prefix_cache": cache,
+                "hit_rate": hit, "prefill_total_tokens": 2080,
+                "prefill_compute_tokens": comp, "repl_bytes_total": bytes_,
+                "shared_page_ship_ratio": ship}
+    return {"arch": "llama3-8b",
+            "sweep": {"0.0": pt(0.0),
+                      "0.5": pt(0.5, hit=0.4, comp=1216, bytes_=1392640),
+                      "0.8": pt(0.8, hit=0.69, comp=640, bytes_=819200,
+                                ship=0.87)},
+            "baseline_no_cache": pt(0.8, cache=False),
+            "compute_reduction_x": 3.25,
+            "repl_bytes_reduction_x": 2.8,
+            "shared_page_ship_ratio": 0.87}
+
+
+def _check_prefix(payload):
+    problems = []
+    check_bench.check_prefix("BENCH_paged.json", payload, problems)
+    return problems
+
+
+def test_valid_prefix_passes():
+    assert _check_prefix(_valid_prefix()) == []
+
+
+def test_missing_prefix_section_flagged():
+    assert any("prefix section missing" in p for p in _check_prefix(None))
+
+
+def test_prefix_sweep_shape_gated():
+    payload = _valid_prefix()
+    payload["sweep"] = {"0.8": payload["sweep"]["0.8"]}
+    assert any("< 2 points" in p for p in _check_prefix(payload))
+    payload = _valid_prefix()
+    payload["sweep"]["0.5"]["hit_rate"] = 1.7
+    assert any("hit_rate" in p for p in _check_prefix(payload))
+    payload = _valid_prefix()
+    for pt in payload["sweep"].values():
+        pt["hit_rate"] = 0.0              # cache never hit anything
+    assert any("cache inert" in p for p in _check_prefix(payload))
+
+
+def test_prefix_reduction_floors_gated():
+    """The ISSUE 7 acceptance numbers are load-bearing: either reduction
+    slipping under 2x turns bench-check red."""
+    for key in ("compute_reduction_x", "repl_bytes_reduction_x"):
+        payload = _valid_prefix()
+        payload[key] = 1.4
+        assert any(key in p and "< 2.0x" in p
+                   for p in _check_prefix(payload))
+
+
+def test_prefix_ship_ratio_gated():
+    """A shared page must ship at most ~once per ring target: a ratio
+    beyond 1.1x single-reference means replication is copying per
+    reference again."""
+    payload = _valid_prefix()
+    payload["shared_page_ship_ratio"] = 1.6
+    assert any("re-shipped" in p for p in _check_prefix(payload))
+    payload = _valid_prefix()
+    payload["baseline_no_cache"]["prefix_cache"] = True
+    assert any("baseline_no_cache" in p for p in _check_prefix(payload))
+
+
 def test_repo_bench_paged_passes():
     """The committed BENCH_paged.json must satisfy its own schema."""
     root = os.path.join(os.path.dirname(__file__), "..")

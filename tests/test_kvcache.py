@@ -13,7 +13,15 @@ invariants the serving engine depends on:
     the replicate action — allocation, appends, recycling, and promotion
     never launder an unreplicated block into a replicated one;
   * table shape: every primary table is a contiguous ascending run of
-    absolute logical pages with sane fill counts.
+    absolute logical pages with sane fill counts;
+  * prefix-cache refcounts: every interned page's refcount equals the
+    number of live references (primary + replica tables) to its slot,
+    never goes negative, and an interned slot is NEVER on the free list —
+    recycling, freeing, retiring, and pressure eviction decref instead of
+    freeing (the copy-on-write aliasing hazard);
+  * prefix-index shape: slot<->key maps stay bijective and the parent ->
+    children chain stays consistent under interleaved intern / attach /
+    CoW / eviction pressure.
 
 The action/invariant logic lives in ``PoolActions`` and is driven two ways:
 a numpy-RNG sweep that runs everywhere (tier-1), and a hypothesis stateful
@@ -366,15 +374,18 @@ class PoolActions:
     N_BLOCKS, PAGE, WINDOW, N_BLOBS = 24, 4, 12, 6
     ACTIONS = ("allocate", "allocate_pressure", "append", "recycle",
                "free_one", "host_replica", "retire", "promote", "evict",
-               "evict_blobs", "replicate_pass")
+               "evict_blobs", "replicate_pass", "allocate_shared", "intern",
+               "evict_prefixes", "host_shared")
 
     def __init__(self):
         self.pool = PagedKVPool(n_blocks=self.N_BLOCKS, page_size=self.PAGE,
                                 window=self.WINDOW, blob_words=2,
-                                n_blobs=self.N_BLOBS)
+                                n_blobs=self.N_BLOBS, prefix_cache=True,
+                                arch_key="prop")
         self.live = set()           # primary rids
         self.rid = 0
         self.peer_rid = 1000        # synthetic peer requests we host
+        self.tokens = {}            # rid -> prompt token ids (intern input)
         # ids of refs blessed by the replicate action (dirty monotonicity)
         self.blessed = set()
         self._all_refs = []         # keep ids stable (no gc reuse)
@@ -480,6 +491,53 @@ class PoolActions:
             ref.replicated = True
             self.blessed.add(id(ref))
 
+    # -- prefix-cache actions ------------------------------------------------
+    def allocate_shared(self, tokens=1, fam=0, div=0, **_):
+        """Fresh request whose prompt comes from one of a few token
+        families: repeats within a family produce longest-prefix hits
+        (shared-page attach), ``div`` replaces the tail so lookups diverge
+        mid-chain (the copy-on-write path once the pages are interned)."""
+        self.rid += 1
+        ids = [1000 * (fam % 3 + 1) + j for j in range(tokens)]
+        if div:
+            cut = min(div, tokens)
+            ids = ids[:tokens - cut] + \
+                [7919 * self.rid + j for j in range(cut)]
+        try:
+            self._track(self.pool.allocate(self.rid, tokens, token_ids=ids))
+            self.live.add(self.rid)
+            self.tokens[self.rid] = ids
+            self.pool.prefix_hits_by_rid.pop(self.rid, None)
+        except MemoryError:
+            pass
+
+    def intern(self, idx=0, **_):
+        """Publish a live request's fully-covered prompt pages (the engine
+        does this once prefill completes)."""
+        rid = self._pick_live(idx)
+        if rid is not None and rid in self.tokens:
+            self.pool.intern_prefix(rid, self.tokens[rid])
+
+    def evict_prefixes(self, **_):
+        """Full-pressure sweep over the prefix index: only refcount-0
+        pages may be reclaimed (the invariants catch anything else)."""
+        self.pool.evict_cached_prefixes(self.pool.n_blocks)
+
+    def host_shared(self, idx=0, **_):
+        """Host an interned page for a synthetic peer request (replication
+        of a shared page: refcount++ on the hosted entry, no fresh slot
+        when the key is already resident)."""
+        entries = sorted(self.pool.prefix_index.values(),
+                         key=lambda e: e.key)
+        if not entries:
+            return
+        e = entries[idx % len(entries)]
+        self.peer_rid += 1
+        res = self.pool.host_shared_block(98, self.peer_rid, e,
+                                          e.logical_idx)
+        if res is not None:
+            self._track([res[0]])
+
     # -- invariants ----------------------------------------------------------
     def check_no_slot_leak_or_double_book(self):
         pool = self.pool
@@ -488,10 +546,52 @@ class PoolActions:
             used.extend(ref.slot for ref in pool.table(rid))
         for key in list(pool._replica_tables):
             used.extend(ref.slot for ref in pool._replica_tables[key])
-        assert len(used) == len(set(used)), "slot double-booked"
+        interned = set(pool._slot_prefix)
+        # sharing-aware double-booking: only INTERNED slots may carry more
+        # than one reference; private slots are exclusively owned
+        private = [s for s in used if s not in interned]
+        assert len(private) == len(set(private)), "private slot double-booked"
         assert set(used).isdisjoint(pool._free), "slot both used and free"
+        assert interned.isdisjoint(pool._free), \
+            "interned slot freed while in the prefix index"
         assert len(pool._free) == len(set(pool._free)), "double-free"
-        assert len(used) + pool.n_free == pool.n_blocks, "slot leaked"
+        # every block is exactly one of: privately used, interned, free
+        assert len(set(private)) + len(interned) + pool.n_free \
+            == pool.n_blocks, "slot leaked"
+
+    def check_prefix_refcounts(self):
+        """Each interned page's refcount equals the number of live
+        references to its slot across primary AND replica tables — so no
+        path can free a page at refcount > 0, and CoW (which swaps the
+        referencing BlockRef onto a fresh private slot) always shows up as
+        a decrement here, never as an in-place mutation of a shared slot."""
+        pool = self.pool
+        counts = {}
+        for rid in pool.live_requests():
+            for ref in pool.table(rid):
+                counts[ref.slot] = counts.get(ref.slot, 0) + 1
+        for table in pool._replica_tables.values():
+            for ref in table:
+                counts[ref.slot] = counts.get(ref.slot, 0) + 1
+        for key, e in pool.prefix_index.items():
+            assert e.refcount >= 0, "negative refcount"
+            assert e.refcount == counts.get(e.slot, 0), (
+                f"refcount drift: entry says {e.refcount}, "
+                f"tables hold {counts.get(e.slot, 0)}")
+
+    def check_prefix_index_consistent(self):
+        """slot<->key bijection and parent->children chain consistency —
+        'interned mapping stable under eviction pressure'."""
+        pool = self.pool
+        assert len(pool._slot_prefix) == len(pool.prefix_index)
+        for key, e in pool.prefix_index.items():
+            assert e.key == key
+            assert pool._slot_prefix.get(e.slot) == key, \
+                "slot->key map out of sync with the index"
+        kids = [k for ks in pool._prefix_children.values() for k in ks]
+        assert len(kids) == len(set(kids)), "duplicate child link"
+        assert set(kids) == set(pool.prefix_index), \
+            "children chain out of sync with the index"
 
     def check_no_blob_leak_or_double_book(self):
         pool = self.pool
@@ -530,6 +630,8 @@ class PoolActions:
 
     def check_all(self):
         self.check_no_slot_leak_or_double_book()
+        self.check_prefix_refcounts()
+        self.check_prefix_index_consistent()
         self.check_no_blob_leak_or_double_book()
         self.check_dirty_flags_are_monotone()
         self.check_primary_tables_contiguous()
@@ -538,7 +640,8 @@ class PoolActions:
 def _random_args(rng):
     return {"tokens": int(rng.integers(1, 31)), "idx": int(rng.integers(8)),
             "n": int(rng.integers(1, 5)), "first": int(rng.integers(10)),
-            "fresh": bool(rng.integers(2)), "lidx": int(rng.integers(13))}
+            "fresh": bool(rng.integers(2)), "lidx": int(rng.integers(13)),
+            "fam": int(rng.integers(3)), "div": int(rng.integers(6))}
 
 
 def _run_random_sequences(n_sequences, steps, seed=0):
@@ -560,6 +663,49 @@ def test_pool_random_action_sequences():
 @pytest.mark.slow
 def test_pool_random_action_sequences_deep():
     _run_random_sequences(n_sequences=500, steps=100, seed=1)
+
+
+# -- aliasing-hazard regressions (windowed recycling / pressure eviction
+#    must never reclaim a page the prefix index still references) ------------
+
+def test_recycle_out_of_window_never_frees_interned_pages():
+    pool = PagedKVPool(n_blocks=16, page_size=4, window=8,
+                       prefix_cache=True, arch_key="t")
+    ids = list(range(8))
+    pool.allocate(1, 8, token_ids=ids)
+    pool.intern_prefix(1, ids)
+    interned_slots = set(pool._slot_prefix)
+    assert len(interned_slots) == 2
+    # decode far enough past the window that both prompt pages fall out
+    for _ in range(24):
+        pool.recycle_out_of_window(1)
+        pool.append_token(1)
+    assert interned_slots.isdisjoint(pool._free), \
+        "windowed recycle returned an interned page to the free list"
+    # the cached chain must still resolve for a newcomer
+    full, _ = pool.match_prefix(ids, peek=True)
+    assert len(full) == 2
+    # and those pages are genuinely reusable: a fresh request attaches them
+    refs = pool.allocate(2, 8, token_ids=ids)
+    assert [r.slot for r in refs] == [e.slot for e in full]
+
+
+def test_pressure_eviction_respects_prefix_refcounts():
+    pool = PagedKVPool(n_blocks=8, page_size=4,
+                       prefix_cache=True, arch_key="t")
+    ids = list(range(8))
+    pool.allocate(1, 8, token_ids=ids)
+    pool.intern_prefix(1, ids)
+    # rid 1 still references both pages -> full-pressure sweep reclaims 0
+    assert pool.evict_cached_prefixes(pool.n_blocks) == 0
+    assert len(pool.prefix_index) == 2
+    # refcount-0 pages stay warm (free keeps them cached) ...
+    pool.free(1)
+    assert len(pool.prefix_index) == 2
+    assert all(e.refcount == 0 for e in pool.prefix_index.values())
+    # ... until pressure actually needs the blocks
+    assert pool.evict_cached_prefixes(pool.n_blocks) == 2
+    assert not pool.prefix_index and pool.n_free == pool.n_blocks
 
 
 if HAVE_HYPOTHESIS:
@@ -615,6 +761,23 @@ if HAVE_HYPOTHESIS:
         @rule()
         def replicate_pass(self):
             self.m.replicate_pass()
+
+        @rule(tokens=st.integers(1, 30), fam=st.integers(0, 2),
+              div=st.integers(0, 5))
+        def allocate_shared(self, tokens, fam, div):
+            self.m.allocate_shared(tokens=tokens, fam=fam, div=div)
+
+        @rule(idx=st.integers(0, 7))
+        def intern(self, idx):
+            self.m.intern(idx=idx)
+
+        @rule()
+        def evict_prefixes(self):
+            self.m.evict_prefixes()
+
+        @rule(idx=st.integers(0, 7))
+        def host_shared(self, idx):
+            self.m.host_shared(idx=idx)
 
         @invariant()
         def pool_invariants(self):

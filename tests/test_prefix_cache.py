@@ -1,0 +1,237 @@
+"""Prefix caching is a pure ALLOCATION change, never a numerics change:
+attaching interned prefix pages by reference (and CoW-ing on divergence)
+must leave every sampled token and every prompt-page byte identical to a
+cold start — for all three paged families, with the int8 pool on and off,
+and across an instance kill while N requests share a prefix page."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.request import Request, RequestState
+
+ARCHS = ["llama3-8b", "mixtral-8x7b", "recurrentgemma-9b"]
+
+
+# -- pool-level boundary cases (metadata mode) -------------------------------
+
+def _meta_pool(**kw):
+    kw.setdefault("n_blocks", 16)
+    kw.setdefault("page_size", 4)
+    return PagedKVPool(prefix_cache=True, arch_key="t", **kw)
+
+
+def test_sub_page_prefixes_never_interned():
+    pool = _meta_pool()
+    pool.allocate(1, 3, token_ids=[1, 2, 3])
+    assert pool.intern_prefix(1, [1, 2, 3]) == 0
+    assert not pool.prefix_index
+    # 6 tokens: only the fully covered leading page is interned
+    pool.allocate(2, 6, token_ids=[1, 2, 3, 4, 5, 6])
+    assert pool.intern_prefix(2, [1, 2, 3, 4, 5, 6]) == 1
+    assert len(pool.prefix_index) == 1
+    (entry,) = pool.prefix_index.values()
+    assert entry.tokens == (1, 2, 3, 4)
+
+
+def test_longest_prefix_match_boundaries():
+    pool = _meta_pool()
+    ids = list(range(8))
+    pool.allocate(1, 8, token_ids=ids)
+    assert pool.intern_prefix(1, ids) == 2
+    # exact chain: both pages, no partial
+    full, partial = pool.match_prefix(ids, peek=True)
+    assert [e.logical_idx for e in full] == [0, 1] and partial is None
+    # prompt ends inside page 1: full page 0 + 2-token partial of page 1
+    full, partial = pool.match_prefix(ids[:6], peek=True)
+    assert len(full) == 1 and partial is not None
+    assert partial[0].logical_idx == 1 and partial[1] == 2
+    # divergence mid page 1: same shape (the CoW case)
+    full, partial = pool.match_prefix(ids[:6] + [99, 100], peek=True)
+    assert len(full) == 1 and partial == partial
+    assert partial[0].logical_idx == 1 and partial[1] == 2
+    # divergence mid page 0: no full match, partial of the root child
+    full, partial = pool.match_prefix([0, 1, 2, 99], peek=True)
+    assert full == [] and partial[0].logical_idx == 0 and partial[1] == 3
+    # unrelated prompt: nothing
+    assert pool.match_prefix([50] * 8, peek=True) == ([], None)
+
+
+def test_append_to_shared_page_copies_on_write():
+    """Structural CoW: a decode token landing on a shared page moves the
+    request onto a fresh private slot; the interned page keeps its slot,
+    its bytes (never written through), and the other holder's reference."""
+    pool = _meta_pool()
+    ids = list(range(8))
+    pool.allocate(1, 8, token_ids=ids)
+    pool.intern_prefix(1, ids)
+    e0, e1 = sorted(pool.prefix_index.values(), key=lambda e: e.logical_idx)
+    # second request attaches page 0 fully + page 1 partially (6 tokens)
+    pool.allocate(2, 6, token_ids=ids[:6])
+    assert pool.prefix_hits_by_rid[2] == 6
+    t2 = pool.table(2)
+    assert [r.slot for r in t2] == [e0.slot, e1.slot]
+    assert (e0.refcount, e1.refcount) == (2, 2)
+    ref = pool.append_token(2)              # token 7 lands inside page 1
+    assert pool.cow_copies == 1
+    assert ref.slot != e1.slot and ref.n_filled == 3
+    # the interned entry is untouched and rid 1 still points at it
+    assert pool.prefix_index[e1.key].slot == e1.slot
+    assert pool.table(1)[1].slot == e1.slot
+    assert (e0.refcount, e1.refcount) == (2, 1)
+
+
+# -- engine-level byte equivalence (real pools) ------------------------------
+
+def _mk_req(rid, ids, out):
+    return Request(rid=rid, prompt_len=len(ids), max_new_tokens=out,
+                   arrival_time=0.0, prompt_tokens=list(ids))
+
+
+def _capture_pages(inst, req, kv_quant):
+    page = inst.pool.page_size
+    pages = {}
+    for ref in inst.pool.table(req.rid):
+        valid = min(page, req.prompt_len - ref.logical_idx * page)
+        if valid <= 0:
+            continue
+        raw = (inst.pool.read_block_quantized(ref.slot)
+               if kv_quant else inst.pool.read_block(ref.slot))
+        pages[ref.logical_idx] = [np.asarray(a[:, :, :valid], np.float32)
+                                  for a in raw]
+    return pages
+
+
+def _warm_run(arch, kv_quant, prefix_cache, prime_ids, follower_ids,
+              out=6, capture_rid=1):
+    """Prime the cache with one request run to completion, then submit the
+    followers together; snapshot the captured follower's prompt pages the
+    moment it enters DECODE."""
+    cfg = get_config(arch).reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       replicate=False, prefill_chunk=8,
+                                       kv_quant=kv_quant,
+                                       prefix_cache=prefix_cache),
+                     n_instances=1, seed=0)
+    eng.submit(_mk_req(0, prime_ids, out))
+    eng.run(300)
+    assert not eng.has_pending()
+    followers = [_mk_req(i + 1, ids, out)
+                 for i, ids in enumerate(follower_ids)]
+    for r in followers:
+        eng.submit(r)
+    inst = eng.instances[0]
+    pages = None
+    for _ in range(500):
+        if not eng.has_pending():
+            break
+        eng.step()
+        req = followers[capture_rid - 1]
+        if pages is None and req.state in (RequestState.DECODE,
+                                           RequestState.DONE) \
+                and req.rid in inst.pool.live_requests():
+            pages = _capture_pages(inst, req, kv_quant)
+    assert not eng.has_pending()
+    return eng, [r.output_tokens for r in followers], pages
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shared_prefix_equivalent_to_cold_start(arch, kv_quant):
+    """dense/MoE/hybrid x int8 on/off: two followers repeating a primed
+    20-token prompt produce the exact cold-start token streams AND
+    byte-identical prompt pages, while genuinely hitting the cache."""
+    rng = np.random.default_rng(0)
+    ids = rng.integers(1, 1024, 20).tolist()
+    warm_eng, warm_toks, warm_pages = _warm_run(
+        arch, kv_quant, True, ids, [ids, ids])
+    cold_eng, cold_toks, cold_pages = _warm_run(
+        arch, kv_quant, False, ids, [ids, ids])
+    assert warm_toks == cold_toks
+    assert warm_pages is not None and set(warm_pages) == set(cold_pages)
+    for logical in cold_pages:
+        for a, b in zip(cold_pages[logical], warm_pages[logical]):
+            np.testing.assert_array_equal(a, b)
+    stats = warm_eng.prefix_stats()
+    assert stats["enabled"] and stats["prefix_cached_tokens"] >= 16
+    assert cold_eng.prefix_stats()["prefix_cached_tokens"] == 0
+    if arch != "recurrentgemma-9b" and not kv_quant:
+        # skip-eligible families actually save prefill compute
+        assert stats["prefill_compute_tokens"] < stats["prefill_total_tokens"]
+
+
+def test_mid_page_divergence_cow_keeps_shared_bytes(arch="llama3-8b"):
+    """A follower sharing 12 of 20 tokens (divergence inside page 1)
+    triggers exactly one CoW; the interned page's bytes are bit-unchanged
+    afterwards and the follower's stream matches a cold start."""
+    rng = np.random.default_rng(1)
+    ids = rng.integers(1, 1024, 20).tolist()
+    fork = ids[:12] + rng.integers(1, 1024, 8).tolist()
+    warm_eng, warm_toks, _ = _warm_run(arch, False, True, ids, [fork])
+    inst = warm_eng.instances[0]
+    assert inst.pool.cow_copies >= 1
+    # page 1 of the primed chain survives, bytes intact, under the chain key
+    full, _ = inst.pool.match_prefix(ids, peek=True)
+    assert len(full) == 2
+    _, cold_toks, _ = _warm_run(arch, False, False, ids, [fork])
+    assert warm_toks == cold_toks
+
+
+# -- chaos drill: kill an instance while N requests share a prefix page -----
+
+def _shared_failover_run(kv_quant, fail_at, out=10):
+    cfg = get_config("llama3-8b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefill_chunk=8, kv_quant=kv_quant,
+                                       prefix_cache=True, auto_rejoin=True,
+                                       rejoin_delay=2.0),
+                     n_instances=2, seed=0)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(1, 1024, 16).tolist()
+    # prime BOTH instances (least-loaded routing puts one prime on each)
+    primes = [_mk_req(i, shared + rng.integers(1, 1024, 4).tolist(), 2)
+              for i in range(2)]
+    for r in primes:
+        eng.submit(r)
+    eng.run(300)
+    assert not eng.has_pending()
+    followers = [_mk_req(10 + i, shared + [100 + i], out) for i in range(4)]
+    for r in followers:
+        eng.submit(r)
+    steps = 0
+    while eng.has_pending() and steps < 600:
+        eng.step()
+        steps += 1
+        if fail_at is not None and steps == fail_at:
+            assert eng.instances[0].requests, \
+                "kill must land while the victim serves shared-prefix work"
+            eng.fail_instance(0)
+    assert not eng.has_pending()
+    # warm spare epilogue: the rejoined instance serves the same prefix
+    late = _mk_req(50, shared + [999], out)
+    eng.submit(late)
+    eng.run(300)
+    assert not eng.has_pending()
+    return eng, [r.output_tokens for r in followers + [late]]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_shared_prefix_chaos_drill(kv_quant):
+    """Kill instance 0 while 4 requests share interned prefix pages:
+    survivors (and their migrated victims) plus a late request on the
+    rejoined warm spare all emit exactly the failure-free streams, and
+    sharing survives the failover (pages stay interned, replication
+    shipped them as shared refs, refcounts reconstructed > 0 uses)."""
+    normal_eng, normal_toks = _shared_failover_run(kv_quant, fail_at=None)
+    failed_eng, failed_toks = _shared_failover_run(kv_quant, fail_at=3)
+    assert failed_toks == normal_toks
+    assert all(len(t) > 0 for t in failed_toks)
+    # sharing intact: shared pages were replicated as refs, not copies,
+    # and the survivor still resolves the full interned chain
+    assert failed_eng.repl_shared_refs_total > 0
+    stats = failed_eng.prefix_stats()
+    assert stats["shared_replica_refs"] >= stats["shared_replica_copies"]
+    assert any(inst.alive and len(inst.pool.prefix_index) >= 2
+               for inst in failed_eng.instances)

@@ -24,7 +24,11 @@ Checks, per file:
     modes and a delta reduction factor > 1;
   * ``int8`` byte-reduction and ``recycling`` residency sections;
   * ``repl_overlap`` sync/async/off replication ms-per-step (presence and
-    positivity only — wall-clock ratios are too noisy to gate on).
+    positivity only — wall-clock ratios are too noisy to gate on);
+  * ``prefix`` shared-prefix caching sweep: hit rates in [0, 1] and rising
+    with the shared fraction, >= 2x prefill-compute and replication-byte
+    reductions at 80% shared vs the cache-off baseline, and a
+    shared-page ship ratio <= 1.1x single-reference.
 
 Exit status 0 = clean; 1 = problems (each printed one per line).
 
@@ -175,6 +179,59 @@ def check_paged(path: str, problems: list):
             problems.append(
                 f"{name}: recycling.{arch}: peak residency {peak!r} outside "
                 f"(0, {bound!r}]")
+    check_prefix(name, data.get("prefix"), problems)
+
+
+def check_prefix(name: str, prefix, problems: list):
+    """ISSUE 7 acceptance gate: the shared-prefix sweep must be present
+    with sane hit rates, the 80%-shared run must cut prefill compute AND
+    replication bytes >= 2x vs the cache-off baseline, and a shared page
+    must ship at most ~once per ring target (ratio <= 1.1x
+    single-reference)."""
+    if not isinstance(prefix, dict):
+        problems.append(f"{name}: prefix section missing")
+        return
+    sweep = prefix.get("sweep")
+    if not isinstance(sweep, dict) or len(sweep) < 2:
+        problems.append(f"{name}: prefix.sweep missing or < 2 points")
+        sweep = {}
+    for frac, pt in sweep.items():
+        hr = pt.get("hit_rate") if isinstance(pt, dict) else None
+        if not _num(hr) or not 0.0 <= hr <= 1.0:
+            problems.append(
+                f"{name}: prefix.sweep[{frac}].hit_rate not in [0, 1]: "
+                f"{hr!r}")
+    if sweep:
+        rates = [pt.get("hit_rate", 0) for _, pt in
+                 sorted(sweep.items(), key=lambda kv: float(kv[0]))
+                 if isinstance(pt, dict)]
+        if rates and rates[-1] <= rates[0]:
+            problems.append(
+                f"{name}: prefix.sweep hit rate flat across shared "
+                f"fractions ({rates[0]!r} -> {rates[-1]!r}) — cache inert")
+    base = prefix.get("baseline_no_cache")
+    if not isinstance(base, dict) or base.get("prefix_cache") is not False:
+        problems.append(f"{name}: prefix.baseline_no_cache missing or "
+                        "ran with the cache on")
+    for key, floor in (("compute_reduction_x", 2.0),
+                       ("repl_bytes_reduction_x", 2.0)):
+        v = prefix.get(key)
+        if not _num(v):
+            problems.append(
+                f"{name}: prefix.{key} not a finite number: {v!r}")
+        elif v < floor:
+            problems.append(
+                f"{name}: prefix.{key} {v}x < {floor}x — the 80%-shared "
+                "workload no longer pays off")
+    ship = prefix.get("shared_page_ship_ratio")
+    if not _num(ship):
+        problems.append(
+            f"{name}: prefix.shared_page_ship_ratio not a finite number: "
+            f"{ship!r}")
+    elif ship > 1.1:
+        problems.append(
+            f"{name}: prefix.shared_page_ship_ratio {ship} > 1.1 — shared "
+            "pages are being re-shipped per reference")
 
 
 def main(root: str) -> int:
