@@ -23,13 +23,16 @@ bench-paged:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_kernels
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead
 
-# MTTR / TTFT / goodput under an injected failure, kevlarflow vs standard
+# MTTR / TTFT / goodput under an injected failure, kevlarflow vs standard,
+# plus the colocated-vs-disaggregated no-failure TTFT pair
 bench-latency:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --disagg
 
 # CI smoke: regenerate bench output in fast modes, then schema-check it
 bench-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny --disagg
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead --fast
 	$(MAKE) bench-check
 

@@ -187,6 +187,97 @@ def run_mode(family: str, mode: str, prof: dict, seed: int = 0) -> Dict:
     return m
 
 
+def run_nofail(family: str, prof: dict, disagg: bool, seed: int = 0) -> Dict:
+    """One NO-FAILURE run, colocated or disaggregated — the pair behind the
+    disagg TTFT gate (roles must not tax time-to-first-token)."""
+    from repro.configs import get_config
+    from repro.serving.engine import EngineConfig
+    from repro.serving.request import summarize
+    from repro.serving.server import EngineService
+    from repro.serving.workload import poisson_workload
+
+    cfg = get_config(FAMILIES[family]).reduced()
+    ecfg = EngineConfig(
+        max_slots=prof["max_slots"], max_seq=prof["max_seq"],
+        prefill_chunk=prof.get("prefill_chunk") or 8,
+        disaggregate=disagg)
+    svc = EngineService(cfg, ecfg, n_instances=2)
+    rng = np.random.default_rng(seed)
+    try:
+        _warmup(svc, cfg, prof, rng)
+        work = poisson_workload(
+            prof["rps"], prof["duration"], seed=seed,
+            prompt_mean=prof["prompt_mean"], output_mean=prof["output_mean"],
+            max_prompt=prof["max_prompt"], min_output=4,
+            max_output=prof["max_output"])
+        t0 = time.time()
+        measured: List = []
+        for w in work:
+            dt = t0 + w.arrival_time - time.time()
+            if dt > 0:
+                time.sleep(dt)
+            toks = rng.integers(1, cfg.vocab_size, w.prompt_len).tolist()
+            measured.append(svc.submit(toks, w.max_new_tokens))
+        if not svc.drain(timeout=600.0):
+            raise RuntimeError(f"{family}/disagg={disagg}: did not drain")
+        makespan = time.time() - t0
+    finally:
+        svc.shutdown()
+    m = summarize(measured, span=makespan)
+    m["disaggregate"] = disagg
+    m["n_submitted"] = len(measured)
+    m["makespan"] = makespan
+    if disagg:
+        st = svc.engine.disagg_stats()
+        m["handoff"] = {k: st[k] for k in
+                        ("handoffs_seated", "handoff_blocks_total",
+                         "handoff_blobs_total", "handoff_bytes_total")}
+        m["roles"] = st["roles"]
+    return m
+
+
+DISAGG_HEADER = ("bench,family,mode,n,ttft_avg_s,ttft_p99_s,latency_avg_s,"
+                 "goodput_tok_s,handoff_blocks,handoff_bytes")
+
+
+def main_disagg(fast: bool = True, profile: str = None, families=None):
+    """--disagg entry: colocated vs disaggregated no-failure pairs, merged
+    into BENCH_latency.json as the ``disagg`` section (the failure-mode
+    ``families`` section is preserved untouched)."""
+    profile = profile or ("tiny" if fast else "full")
+    prof = PROFILES[profile]
+    families = families or ["dense"]     # smoke default: one family
+    rows = []
+    section = {"profile": profile, "n_instances": 2, "families": {}}
+    for family in families:
+        colo = run_nofail(family, prof, disagg=False)
+        dis = run_nofail(family, prof, disagg=True)
+        per = {"arch": FAMILIES[family], "colocated": colo, "disagg": dis,
+               "ttft_ratio_x": round(
+                   dis["ttft_avg"] / max(colo["ttft_avg"], 1e-9), 2)}
+        section["families"][family] = per
+        for label, m in (("colocated", colo), ("disagg", dis)):
+            h = m.get("handoff", {})
+            rows.append(fmt_row(
+                "disagg", family, label, m["n"],
+                round(m["ttft_avg"], 3), round(m["ttft_p99"], 3),
+                round(m["latency_avg"], 3), round(m["goodput_tok_s"], 1),
+                h.get("handoff_blocks_total", 0),
+                h.get("handoff_bytes_total", 0)))
+    path = os.path.abspath(BENCH_JSON)
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["disagg"] = section
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(rows, DISAGG_HEADER)
+    print(f"wrote {path} (disagg section)")
+    return rows
+
+
 def _ratio(std: Dict, kf: Dict, key: str) -> float:
     return round(std[key] / max(kf[key], 1e-9), 2)
 
@@ -199,11 +290,16 @@ def main(fast: bool = True, profile: str = None, families=None):
     payload = {"meta": {"profile": profile, **prof,
                         "n_instances": 2, "failed_instance": 0},
                "families": {}}
-    if len(families) < len(FAMILIES) and os.path.exists(BENCH_JSON):
-        # single-family runs MERGE into the existing artifact — clobbering
-        # the other families' sections would fail the next bench-check
+    if os.path.exists(BENCH_JSON):
+        # partial runs MERGE into the existing artifact — clobbering the
+        # other families' sections (or the --disagg section) would fail
+        # the next bench-check
         with open(BENCH_JSON) as f:
-            payload["families"] = json.load(f).get("families", {})
+            prior = json.load(f)
+        if len(families) < len(FAMILIES):
+            payload["families"] = prior.get("families", {})
+        if "disagg" in prior:
+            payload["disagg"] = prior["disagg"]
     for family in families:
         per = {"arch": FAMILIES[family]}
         for mode in ("kevlarflow", "standard"):
@@ -245,6 +341,14 @@ if __name__ == "__main__":
                          "a failure")
     ap.add_argument("--family", choices=list(FAMILIES), default=None,
                     help="run a single family (default: all three)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the colocated-vs-disaggregated no-failure "
+                         "pair instead of the failure harness; merges a "
+                         "`disagg` section into BENCH_latency.json")
     args = ap.parse_args()
-    main(fast=args.tiny,
-         families=[args.family] if args.family else None)
+    if args.disagg:
+        main_disagg(fast=args.tiny,
+                    families=[args.family] if args.family else None)
+    else:
+        main(fast=args.tiny,
+             families=[args.family] if args.family else None)

@@ -68,6 +68,8 @@ from repro.models.hybrid import state_blob_words
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
+from repro.serving.transport import (TransportChannel, collect_dirty,
+                                     host_table_growth, reconcile_replica)
 
 SCRATCH_RID = -7  # pool rid reserved for the idle-slot scratch block
 
@@ -110,6 +112,18 @@ class EngineConfig:
     # block until the replica is durable (the synchronous baseline
     # bench_overhead's repl_overlap section measures against).
     repl_async: bool = True
+    # prefill/decode disaggregation: instances get roles — the first
+    # max(1, n//2) run chunked prefill ONLY and stream each fully-covered
+    # prompt page (plus the hybrid state blob, and the chain key for
+    # prefix-cached pages, which the decode side interns rather than
+    # copies) to a decode-role instance over the SAME block transport
+    # replication uses; the decode instance seats the request when the
+    # final chunk's pages land. Serving is byte-identical to colocated
+    # mode (tokens AND raw page bytes); int8 pools stream quantized pages
+    # 1.9-3.2x smaller. Requires prefill_chunk > 0 and >= 2 instances.
+    # Roles are soft: if every prefill-role instance is dead, survivors
+    # serve colocated; a decode-side kill re-streams to another target.
+    disaggregate: bool = False
     # recovery policy applied by fail_instance. "kevlarflow": in-flight
     # requests resume from promoted replicas, the dead instance's queue
     # reroutes to survivors, and a warm spare rejoins after rejoin_delay
@@ -191,13 +205,23 @@ class RealInstance:
 
     def __init__(self, cfg, params, ecfg: EngineConfig, instance_id: int = 0,
                  executor: Optional[FamilyExecutor] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 role: str = "both"):
         self.cfg = cfg
         self.family = cfg.arch_type
         self.params = params          # node-resident weights (shared ref!)
         self.ecfg = ecfg
         self.instance_id = instance_id
         self.alive = True
+        # disaggregation role: "prefill" instances run chunked prefill only
+        # and hand finished prompts to the engine's handoff stream instead
+        # of seating them; "decode" instances receive streamed pages and
+        # decode; "both" is colocated serving (disaggregate=False)
+        self.role = role
+        self.handoff_mode = role == "prefill"
+        # prefill jobs whose final chunk just ran under handoff_mode: the
+        # engine drains these into its handoff records each step
+        self.ready_handoffs: List[dict] = []
         B, S = ecfg.max_slots, ecfg.max_seq
         page = cfg.page_size
         # sliding-window archs serve any max_seq: the block table holds only
@@ -263,10 +287,15 @@ class RealInstance:
         # whole prefix). Ineligible configs still share pages — they
         # recompute the full prompt but skip the writes to shared pages
         # (deterministic recompute reproduces the interned bytes).
-        self.prefix_skip_compute = (
-            ecfg.prefix_cache and self.chunk > 0
-            and self.family != "hybrid" and not ecfg.kv_quant
+        # chunk buffers can be seeded from pool pages only when the page
+        # bytes ARE the activation dtype (hybrid carries cross-page
+        # recurrent state; int8 pages are lossy) — shared by the prefix
+        # cache's compute skip and the streamed-handoff resume path
+        self._can_seed_chunks = (
+            self.chunk > 0 and self.family != "hybrid"
+            and not ecfg.kv_quant
             and jnp.dtype(cfg.dtype) == jnp.dtype(PD.kv_dtype(cfg)))
+        self.prefix_skip_compute = ecfg.prefix_cache and self._can_seed_chunks
 
     def _stamp(self, now: float) -> float:
         """Timestamp an event: fresh wall-clock reading when a clock is
@@ -414,6 +443,25 @@ class RealInstance:
         self._seat(slot, req, refs, logits, now)
         return True
 
+    def _first_token(self, req: Request, logits, now: float):
+        """Sample the prompt's first token off the final prefill logits and
+        stamp TTFT — shared by colocated seating and the handoff path (the
+        PREFILL side samples, so TTFT means prefill completion in both
+        modes)."""
+        if self.ecfg.temperature > 0:
+            self._rng, admit_rng = jax.random.split(self._rng)
+        else:
+            admit_rng = None
+        first = sample(logits, rng=admit_rng,
+                       temperature=self.ecfg.temperature)
+        req.output_tokens = [int(first[0])]
+        req.generated = 1
+        req.prefill_progress = 1.0
+        if req.first_token_time < 0:
+            # the prefill produced the first token — stamp AFTER it (so
+            # first_token_time - admit_time is the prefill cost)
+            req.first_token_time = self._stamp(now)
+
     def _seat(self, slot: int, req: Request, refs, logits, now: float):
         """Shared admission tail: point the slot at its pages, sample the
         prompt's first token, and flip the request to DECODE."""
@@ -426,20 +474,10 @@ class RealInstance:
         row[:len(refs)] = [r.slot for r in refs]
         self.block_table[slot] = row
         self.slot_base[slot] = refs[0].logical_idx * self.pool.page_size
-        if self.ecfg.temperature > 0:
-            self._rng, admit_rng = jax.random.split(self._rng)
-        else:
-            admit_rng = None
-        first = sample(logits, rng=admit_rng,
-                       temperature=self.ecfg.temperature)
-        req.output_tokens = [int(first[0])]
-        req.generated = 1
-        req.prefill_progress = 1.0
+        if req.generated == 0:
+            # a handoff that fell back to local seating already sampled
+            self._first_token(req, logits, now)
         req.state = RequestState.DECODE
-        if req.first_token_time < 0:
-            # the prefill produced the first token — stamp AFTER it (so
-            # first_token_time - admit_time is the prefill cost)
-            req.first_token_time = self._stamp(now)
         self.slot_pos[slot] = req.prompt_len
 
     # -- chunked prefill -------------------------------------------------------
@@ -490,7 +528,19 @@ class RealInstance:
                     bref = self.pool.blob_ref(req.rid)
                     self.pool.write_blob(bref.slot, blob[0])
                     self.slot_blob[slot] = bref.slot
-                self._seat(slot, req, job["refs"], logits, now)
+                if self.handoff_mode:
+                    # disaggregation: the prompt's pages (and blob) are in
+                    # the pool but the slot parks in PREFILL state — the
+                    # engine streams the remaining pages to the decode
+                    # target and seats the request THERE. The first token
+                    # is sampled now, so TTFT means the same thing it does
+                    # colocated: prefill completion.
+                    self._first_token(req, logits, now)
+                    self.ready_handoffs.append(
+                        {"slot": slot, "req": req, "refs": job["refs"],
+                         "logits": logits})
+                else:
+                    self._seat(slot, req, job["refs"], logits, now)
                 del self.prefill_jobs[slot]
         return ran
 
@@ -636,8 +686,16 @@ class RealInstance:
         out, self.pending_retires = self.pending_retires, []
         return out
 
+    def drain_ready_handoffs(self) -> List[dict]:
+        """Prefill jobs whose final chunk ran since the last drain (handoff
+        mode): their pages are written and the request is ready to stream
+        to its decode target."""
+        out, self.ready_handoffs = self.ready_handoffs, []
+        return out
+
     # -- failover --------------------------------------------------------------
-    def adopt_replica(self, peer: int, req: Request, meta) -> bool:
+    def adopt_replica(self, peer: int, req: Request, meta,
+                      migration: bool = True) -> bool:
         """Failover entry: promote hosted replica blocks to primary and
         resume the request here — no buffer copy, just ownership flip. The
         promoted table is the live WINDOW on sliding-window archs: it must
@@ -681,15 +739,110 @@ class RealInstance:
         req.output_tokens = list(meta["tokens"])
         req.state = RequestState.DECODE
         req.instance_id = self.instance_id
-        req.n_migrations += 1
+        if migration:
+            req.n_migrations += 1
         self.slot_rid[slot] = req.rid
         self.requests[req.rid] = req
         return True
+
+    # -- disaggregated handoff (decode side) -----------------------------------
+    def seat_handoff(self, peer: int, req: Request) -> bool:
+        """Seat a fully-streamed prefill: promote the hosted pages (and
+        blob) to primary and start decoding — the handoff twin of
+        ``adopt_replica``, minus the migration count (a handoff is the
+        normal path, not a failure). The promoted pages carry the exact
+        bytes the prefill wrote, so decode is byte-identical to colocated
+        serving. Returns False (hosted table untouched) when no slot is
+        free yet — the engine retries next step."""
+        meta = {"pos": req.prompt_len, "tokens": list(req.output_tokens)}
+        if not self.adopt_replica(peer, req, meta, migration=False):
+            return False
+        if self.ecfg.prefix_cache and req.prompt_tokens is not None:
+            # same publication a colocated _seat does: the streamed prompt
+            # pages become this pool's warm prefix chain
+            self.pool.intern_prefix(req.rid,
+                                    req.prompt_tokens[:req.prompt_len])
+        return True
+
+    def adopt_prefill_stream(self, peer: int, req: Request) -> bool:
+        """Streamed-handoff recovery: the prefill source died mid-stream,
+        and the pages it already shipped are hosted HERE. Promote them and
+        resume the chunked prefill from the first unstreamed chunk, seeding
+        the chunk buffers from the streamed pages — no recompute for work
+        that already crossed the wire. Only bitwise-lossless configs can
+        seed (``_can_seed_chunks``); everything else returns False and the
+        caller restarts the request from scratch (deterministic recompute
+        keeps the stream byte-identical either way)."""
+        hosted = self.pool.replica_table(peer, req.rid)
+        page = self.pool.page_size
+        n = req.prompt_len
+        usable = 0
+        for i, ref in enumerate(hosted):
+            if ref.logical_idx != i or ref.n_filled < page:
+                break
+            usable += 1
+        slots = self.free_slots()
+        if not (slots and self.alive and self._can_seed_chunks
+                and usable and usable == len(hosted)
+                and usable * page < n):
+            # nothing streamed, a windowed tail (logical start > 0), or a
+            # config that cannot seed buffers losslessly: full restart
+            self.pool.drop_replica(peer, req.rid)
+            return False
+        # snapshot: promote returns the LIVE table list, which the extending
+        # allocate below appends into — concatenating without the copy would
+        # double-count the fresh tail pages
+        refs = list(self.pool.promote_replica(peer, req.rid))
+        for ref in refs:
+            ref.n_filled = page
+            ref.replicated = False
+        try:
+            refs = refs + self.pool.allocate(req.rid, n - usable * page)
+        except MemoryError:
+            self.pool.free(req.rid)
+            return False
+        slot = slots[0]
+        bucket = PD.next_bucket(n, lo=page)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt_tokens
+        k_buf, v_buf = PD.init_chunk_buffers(self.cfg, bucket)
+        c = min(self.chunk, bucket)
+        # resume floored to a chunk boundary; the final chunk always runs
+        # (its logits sample the first token), so resume stays < n
+        done = (min(usable * page, n - 1) // c) * c
+        if done:
+            k_buf, v_buf = PD.seed_chunk_buffers(
+                k_buf, v_buf, self.pool.k, self.pool.v,
+                [r.slot for r in refs[:usable]])
+        self.slot_rid[slot] = req.rid
+        self.requests[req.rid] = req
+        req.state = RequestState.PREFILL
+        req.instance_id = self.instance_id
+        req.prefill_progress = done / n
+        req.n_migrations += 1
+        self.prefill_jobs[slot] = {
+            "req": req, "refs": refs, "toks": toks, "bucket": bucket,
+            "done": done, "pages_written": usable, "cow_page": -1,
+            "k_buf": k_buf, "v_buf": v_buf, "rstates": None,
+        }
+        return True
+
+    def finish_handoff(self, rid: int):
+        """The decode side seated the streamed request: publish its prompt
+        pages into OUR prefix index (warm for future arrivals with the
+        same prefix) and free the parked slot."""
+        req = self.requests.get(rid)
+        if req is None:
+            return
+        if self.ecfg.prefix_cache and req.prompt_tokens is not None:
+            self.pool.intern_prefix(rid, req.prompt_tokens[:req.prompt_len])
+        self.release(rid)
 
     def fail(self):
         self.alive = False
         self.pending_retires.clear()   # a dead primary sends no retires
         self.prefill_jobs.clear()      # mid-chunk work is lost with the node
+        self.ready_handoffs.clear()
         # a dead instance holds no requests (its memory is lost) — the
         # engine captures the victims first; leaving them here would keep
         # has_pending() true forever and hang drain()
@@ -714,19 +867,42 @@ class RealEngine:
         # of compiled programs shared by all instances + rejoining spares
         self.params = api.init_params(cfg, jax.random.PRNGKey(seed))
         self.executor = FamilyExecutor(cfg, self.ecfg)
+        # prefill/decode disaggregation: the first max(1, n//2) instances
+        # take the prefill role, the rest decode; without it every
+        # instance is colocated ("both")
+        if self.ecfg.disaggregate:
+            if n_instances < 2:
+                raise ValueError("disaggregate=True needs >= 2 instances "
+                                 "(one per role)")
+            if self.ecfg.prefill_chunk <= 0:
+                raise ValueError(
+                    "disaggregate=True requires prefill_chunk > 0 — pages "
+                    "stream to the decode side as chunks complete")
+            n_pre = max(1, n_instances // 2)
+            self.roles = {i: "prefill" if i < n_pre else "decode"
+                          for i in range(n_instances)}
+        else:
+            self.roles = {i: "both" for i in range(n_instances)}
         self.instances = [
             RealInstance(cfg, self.params, self.ecfg, i,
-                         executor=self.executor, clock=clock)
+                         executor=self.executor, clock=clock,
+                         role=self.roles[i])
             for i in range(n_instances)]
         # rid -> {"peer", "home", "pos", "tokens"} (tiny host-side metadata;
         # the KV payload lives in the target pool's hosted replica blocks)
         self.replica_meta: Dict[int, dict] = {}
-        # async replication double-buffer: copy jobs staged by
-        # _stage_replication at the end of step N and shipped by
-        # flush_replication at the top of step N+1 (or by the
-        # fail/rejoin barrier). Each entry: {"src", "dst" instance ids,
-        # "blocks": (src_slots, dst_slots), "blobs": (src_slots, dst_slots)}
-        self._pending_ship: List[dict] = []
+        # the staged block/blob transport both byte streams ride: ring
+        # replication ("repl") and the prefill->decode handoff ("handoff").
+        # Copy jobs staged at the end of step N ship at the top of step
+        # N+1 (or at the fail/rejoin barrier); byte totals are accounted
+        # at FLUSH time so a job dropped for a dead target never counts
+        self.transport = TransportChannel(self.instances)
+        # rid -> in-flight handoff record (disaggregation): which prefill
+        # instance is streaming it, the decode target, and whether the
+        # final chunk's pages have landed (seat condition)
+        self._handoffs: Dict[int, dict] = {}
+        self.handoffs_seated = 0
+        self.handoff_streams_resumed = 0
         # arrivals not yet routed (normally drained every step; holds work
         # only while NO instance is alive)
         self.waiting: List[Request] = []
@@ -743,10 +919,6 @@ class RealEngine:
         self._pending_rejoins: List[tuple] = []
         # one dict per fail_instance call; "mttr" lands at rejoin time
         self.failure_events: List[dict] = []
-        # replication traffic accounting (bench_overhead reads these)
-        self.repl_blocks_total = 0
-        self.repl_blobs_total = 0
-        self.repl_bytes_total = 0
         self.repl_steps = 0
         self.active_request_steps = 0
         # sliding-window recycling: retire messages sent to replica hosts
@@ -754,13 +926,58 @@ class RealEngine:
         self.retire_msgs_total = 0
         # shared-page replication: a prefix page ships AT MOST ONCE per
         # (ring target, chain key); later requests referencing it on the
-        # same target add a refcount, not bytes
+        # same target add a refcount, not bytes. Hosting events count per
+        # (target, key) MEMBERSHIP: fail_instance prunes a dead target's
+        # keys, so a rejoin's fresh pool re-counts the hosting when the
+        # key ships again — the ship ratio stays exact across failure
+        # cycles instead of drifting on a stale denominator
         self.repl_shared_refs_total = 0
-        self.repl_shared_copies_total = 0
-        self._shared_hosted_keys: set = set()   # distinct (target, key)
+        self.repl_shared_hostings_total = 0
+        self._shared_hosted_keys: set = set()   # live (target, key) pairs
         # (n_active_slots, wall_seconds) per decode step — bench_latency
         # aggregates these into its TPOT-vs-active-slots sweep
         self.step_samples: List[tuple] = []
+
+    # -- replication traffic accounting (bench_overhead reads these) ---------
+    # Shipped totals count bytes that actually LANDED: flush skips (and
+    # tallies separately) jobs whose target died between stage and flush,
+    # so the totals can never over-count under failure. Staged totals keep
+    # the old stage-time view for the overhead bench's staging-cost story.
+    @property
+    def repl_blocks_total(self) -> int:
+        return self.transport.shipped["repl"].blocks
+
+    @property
+    def repl_blobs_total(self) -> int:
+        return self.transport.shipped["repl"].blobs
+
+    @property
+    def repl_bytes_total(self) -> int:
+        return self.transport.shipped["repl"].bytes
+
+    @property
+    def repl_shared_copies_total(self) -> int:
+        return self.transport.shipped["repl"].shared_copies
+
+    @property
+    def repl_blocks_staged(self) -> int:
+        return self.transport.staged["repl"].blocks
+
+    @property
+    def repl_blobs_staged(self) -> int:
+        return self.transport.staged["repl"].blobs
+
+    @property
+    def repl_bytes_staged(self) -> int:
+        return self.transport.staged["repl"].bytes
+
+    @property
+    def repl_bytes_dropped(self) -> int:
+        return self.transport.dropped["repl"].bytes
+
+    @property
+    def _pending_ship(self) -> List[dict]:
+        return self.transport.pending
 
     def submit(self, req: Request):
         self.waiting.append(req)
@@ -770,11 +987,21 @@ class RealEngine:
         """Instance load as the LB sees it: active slots + queued depth."""
         return len(inst.requests) + len(self.queues[inst.instance_id])
 
+    def _admit_targets(self) -> List[RealInstance]:
+        """Instances that accept NEW work. With disaggregation, arrivals go
+        to prefill-role instances only (decode instances receive requests
+        by handoff, not admission); if every prefill-role instance is dead
+        the survivors serve colocated — roles are soft."""
+        alive = [i for i in self.instances if i.alive]
+        if not self.ecfg.disaggregate:
+            return alive
+        return [i for i in alive if i.role == "prefill"] or alive
+
     def _route(self, req: Request, front: bool = False):
         """Queue-depth-aware admission: place the request on the least-
         loaded ALIVE instance's queue (front=True preserves the position of
         requeued work ahead of later arrivals)."""
-        alive = [i for i in self.instances if i.alive]
+        alive = self._admit_targets()
         if not alive:
             # nobody to serve it — park in the arrival buffer; the next
             # rejoin re-routes it
@@ -820,11 +1047,14 @@ class RealEngine:
         backs off instead of spinning)."""
         self.t = self.clock() if self.clock is not None else self.t + 1.0
         _t0 = time.perf_counter()
-        # async replication: ship the PREVIOUS step's staged delta before
-        # anything here mutates the pools — the copies execute on the
-        # backend while this step's host-side work and decode dispatch
-        # proceed (step N's replication overlaps step N+1's compute)
+        # async shipping: flush the PREVIOUS step's staged jobs (replica
+        # deltas AND handoff pages) before anything here mutates the pools
+        # — the copies execute on the backend while this step's host-side
+        # work and decode dispatch proceed (step N's bytes overlap step
+        # N+1's compute) — then seat any handoff whose final pages landed
         self.flush_replication()
+        if self._handoffs:
+            self._complete_handoffs()
         for iid, ready in list(self._pending_rejoins):
             if self.t >= ready:
                 if self.instances[iid].alive:   # e.g. manual admin rejoin
@@ -847,11 +1077,13 @@ class RealEngine:
         # ...then (rerouting part 2) queued work an instance cannot place —
         # full pool, busy slots — flows to any peer with headroom: an
         # instance can have free slots but a full pool, and vice versa
+        # (under disaggregation only prefill-capable peers take overflow)
+        overflow = self._admit_targets()
         for inst in alive:
             q = self.queues[inst.instance_id]
             if not q:
                 continue
-            for other in sorted(alive, key=self._load):
+            for other in sorted(overflow, key=self._load):
                 if other is inst:
                     continue
                 while q and other.free_slots() and other.admit(q[0], self.t):
@@ -864,6 +1096,12 @@ class RealEngine:
             # one prompt chunk per mid-prefill slot, then the decode batch:
             # admissions interleave with generation instead of stalling it
             inst.prefill_step(self.t)
+            if inst.handoff_mode:
+                # stream every page the chunks just finished writing (and
+                # the whole remainder for prompts whose final chunk ran); a
+                # decode-role instance serving colocated (soft roles) seats
+                # its own prefills locally and never streams
+                self._stage_handoffs(inst)
             finished = inst.step(self.t)
             # retire hosted replicas of pages the primary recycled this
             # step — BEFORE the delta pass, so replica tables mirror the
@@ -889,6 +1127,12 @@ class RealEngine:
         if self.ecfg.replicate:
             self._replicate()
             self.repl_steps += 1
+        if self._handoffs and not self.ecfg.repl_async:
+            # synchronous shipping: the handoff pages staged this step are
+            # already durable (the _replicate barrier above) — seat now
+            # instead of waiting for the next step's flush
+            self.flush_replication(block=True)
+            self._complete_handoffs()
         if n_active:
             self.step_samples.append((n_active, time.perf_counter() - _t0))
             if len(self.step_samples) > 20000:      # bound long-run memory
@@ -918,31 +1162,35 @@ class RealEngine:
         if not self.ecfg.repl_async:
             self.flush_replication(block=True)
 
-    def flush_replication(self, block: bool = False):
-        """Ship every staged replica delta now — the async double-buffer's
+    def flush_replication(self, block: bool = False,
+                          exclude: Optional[int] = None):
+        """Ship every staged copy job now — the async double-buffer's
         barrier. Called at the top of every step, and by ``fail_instance``
         / ``rejoin_instance`` BEFORE they touch replicas, so a promoted
         replica always carries the bytes of the primary's last completed
         step (failover stays byte-identical under async shipping).
 
         Safe between steps: nothing mutates the pools between the stage at
-        the end of step N and this flush, and a target that died since
-        staging is skipped (its hosted blocks are already gone)."""
-        pending, self._pending_ship = self._pending_ship, []
-        shipped = []
-        for msg in pending:
-            src = self.instances[msg["src"]]
-            dst = self.instances[msg["dst"]]
-            if not dst.alive:
-                continue
-            src.pool.copy_blocks_to(dst.pool, *msg["blocks"])
-            src.pool.copy_blobs_to(dst.pool, *msg["blobs"])
-            shipped.append(dst)
-        if block and shipped:
-            jax.block_until_ready([d.pool.k for d in shipped])
+        the end of step N and this flush. A target that died since staging
+        — or the instance ``fail_instance`` is about to kill (``exclude``)
+        — is skipped AND its jobs' bytes stay out of the shipped totals:
+        they never landed, so they must never be accounted."""
+        self.transport.flush(block=block, exclude=exclude)
+
+    def _commit_shared_hostings(self, tgt_id: int, grown):
+        """Account one growth's shared-page hostings: refcounts per
+        reference; hosting events per NEW (target, key) membership — the
+        ship-ratio denominator (fail_instance prunes dead targets' keys,
+        so a post-rejoin re-host counts again and the ratio stays exact)."""
+        for key in grown.shared_keys:
+            self.repl_shared_refs_total += 1
+            if (tgt_id, key) not in self._shared_hosted_keys:
+                self._shared_hosted_keys.add((tgt_id, key))
+                self.repl_shared_hostings_total += 1
 
     def _stage_replication(self):
         full = self.ecfg.replication == "full"
+        pc = self.ecfg.prefix_cache
         for inst in self.instances:
             if not inst.alive:
                 continue
@@ -954,6 +1202,7 @@ class RealEngine:
             dst_slots: List[int] = []
             blob_src: List[int] = []
             blob_dst: List[int] = []
+            shared_copies = 0
             for rid, req in inst.requests.items():
                 # mid-chunked-prefill requests have no complete page set to
                 # resume from (and no sampled tokens): their pages ship in
@@ -968,77 +1217,46 @@ class RealEngine:
                         self.instances[meta["home"]].alive:
                     self.instances[meta["home"]].pool.drop_replica(
                         meta["peer"], rid)
-                pc = self.ecfg.prefix_cache
                 table = inst.pool.table(rid)
-                rtab = tgt.pool.replica_table(inst.instance_id, rid)
                 # retires keep the hosted table in lockstep with the live
-                # window; if it ever drifts (e.g. the ring target changed
-                # after a failure, or copy-on-write turned a shared page
-                # private since hosting), drop it and re-host the current
-                # window with matching sharedness
-                if any(a.logical_idx != b.logical_idx
-                       or (pc and inst.pool.prefix_key_of(a.slot)
-                           != tgt.pool.prefix_key_of(b.slot))
-                       for a, b in zip(table, rtab)):
-                    tgt.pool.drop_replica(inst.instance_id, rid)
-                    rtab = []
+                # window; if it ever drifts, drop it and re-host the
+                # current window with matching sharedness
+                reconcile_replica(inst.pool, tgt.pool, inst.instance_id,
+                                  rid, table, prefix_cache=pc)
+                rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                grown = None
                 if len(table) > len(rtab):
-                    hosted_ok = True
-                    for ref in table[len(rtab):]:
-                        key = inst.pool.prefix_key_of(ref.slot) if pc \
-                            else None
-                        if key is not None:
-                            # shared prefix page: the target interns it in
-                            # ITS OWN prefix index keyed by chain hash —
-                            # bytes ship only if no page with this key is
-                            # already resident there (at most once per
-                            # target, however many requests reference it)
-                            res = tgt.pool.host_shared_block(
-                                inst.instance_id, rid,
-                                inst.pool.prefix_index[key],
-                                ref.logical_idx)
-                            if res is None:
-                                hosted_ok = False
-                                break
-                            rref, needs_copy = res
-                            self.repl_shared_refs_total += 1
-                            self._shared_hosted_keys.add((tgt_id, key))
-                            if needs_copy:
-                                src_slots.append(ref.slot)
-                                dst_slots.append(rref.slot)
-                                self.repl_shared_copies_total += 1
-                            ref.replicated = True
-                            rref.replicated = True
-                        elif not tgt.pool.host_replica(
-                                inst.instance_id, rid, 1,
-                                first_logical=ref.logical_idx):
-                            hosted_ok = False
-                            break
-                    if not hosted_ok:
-                        continue       # no headroom on target; retry next pass
-                    rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                    grown = host_table_growth(
+                        inst.pool, tgt.pool, inst.instance_id, rid, table,
+                        prefix_cache=pc)
+                    if grown is None:
+                        continue   # no headroom on target; retry next pass
                 bref = inst.pool.blob_ref(rid)
                 rbref = None
                 if bref is not None:   # hybrid: state blob rides along
                     if not tgt.pool.host_blob_replica(inst.instance_id, rid):
+                        # KV without state can't be resumed: roll back this
+                        # pass's hostings first (pages it interned never
+                        # ship), then drop the stale earlier table
+                        if grown is not None:
+                            grown.rollback(tgt.pool, inst.instance_id, rid)
                         tgt.pool.drop_replica(inst.instance_id, rid)
-                        continue       # KV without state can't be resumed
-                    rbref = tgt.pool.blob_replica_ref(inst.instance_id, rid)
-                for ref, rref in zip(table, rtab):
-                    # immutable shared pages shipped at host time (at most
-                    # once per target) — never per referencing request,
-                    # even in full mode
-                    if pc and tgt.pool.prefix_key_of(rref.slot) is not None:
                         continue
-                    # copy when the primary block is dirty OR the hosted
-                    # block has never received content (rref.replicated
-                    # False on fresh hosting — incl. re-hosting after a
-                    # pressure eviction dropped the old replica table)
-                    if full or not ref.replicated or not rref.replicated:
-                        src_slots.append(ref.slot)
-                        dst_slots.append(rref.slot)
-                        ref.replicated = True
-                        rref.replicated = True
+                    rbref = tgt.pool.blob_replica_ref(inst.instance_id, rid)
+                if grown is not None:
+                    self._commit_shared_hostings(tgt_id, grown)
+                    for s, d in grown.copies:
+                        src_slots.append(s)
+                        dst_slots.append(d)
+                    shared_copies += len(grown.copies)
+                rtab = tgt.pool.replica_table(inst.instance_id, rid)
+                # copy when the primary block is dirty OR the hosted block
+                # has never received content (fresh hosting — incl.
+                # re-hosting after a pressure eviction)
+                s, d = collect_dirty(tgt.pool, table, rtab, full=full,
+                                     prefix_cache=pc)
+                src_slots += s
+                dst_slots += d
                 if bref is not None:
                     if full or not bref.replicated or not rbref.replicated:
                         blob_src.append(bref.slot)
@@ -1052,15 +1270,168 @@ class RealEngine:
                 }
                 req.replicated_through = req.total_len
             if src_slots or blob_src:
-                self._pending_ship.append(
-                    {"src": inst.instance_id, "dst": tgt_id,
-                     "blocks": (src_slots, dst_slots),
-                     "blobs": (blob_src, blob_dst)})
-            self.repl_blocks_total += len(src_slots)
-            self.repl_blobs_total += len(blob_src)
-            self.repl_bytes_total += \
-                len(src_slots) * inst.pool.block_nbytes + \
-                len(blob_src) * inst.pool.blob_nbytes
+                self.transport.stage(
+                    "repl", inst.instance_id, tgt_id,
+                    (src_slots, dst_slots), (blob_src, blob_dst),
+                    shared_copies=shared_copies)
+
+    # -- prefill/decode disaggregation (handoff stream) ------------------------
+    def _pick_decode_target(self, src_id: int) -> Optional[int]:
+        """Least-loaded alive decode-role instance (any other alive peer if
+        no decode-role instance survives; None means seat locally — the
+        colocated fallback)."""
+        cands = [i for i in self.instances
+                 if i.alive and i.instance_id != src_id
+                 and i.role != "prefill"]
+        if not cands:
+            cands = [i for i in self.instances
+                     if i.alive and i.instance_id != src_id]
+        if not cands:
+            return None
+        return min(cands,
+                   key=lambda i: (len(i.requests), i.instance_id)).instance_id
+
+    def _stage_handoffs(self, inst: RealInstance):
+        """Stream ``inst``'s prefill output: every fully-covered prompt
+        page written since the last pass is hosted on (and staged to) the
+        decode target; a prompt whose final chunk just ran streams its
+        whole remainder (partial tail page + hybrid blob included) and is
+        marked ready to seat once those bytes land."""
+        for h in inst.drain_ready_handoffs():
+            rec = self._handoffs.setdefault(
+                h["req"].rid, {"src": inst.instance_id, "dst": None,
+                               "req": h["req"], "gen": 0, "inflight": 0})
+            rec.update(refs=h["refs"], logits=h["logits"], final=True,
+                       slot=h["slot"], ready_to_seat=False)
+        for slot, job in list(inst.prefill_jobs.items()):
+            rid = job["req"].rid
+            if rid not in self._handoffs:
+                self._handoffs[rid] = {
+                    "src": inst.instance_id, "dst": None, "req": job["req"],
+                    "gen": 0, "inflight": 0, "final": False}
+        for rid, rec in list(self._handoffs.items()):
+            if rec["src"] == inst.instance_id:
+                self._stream_handoff(inst, rec)
+
+    def _stream_handoff(self, inst: RealInstance, rec: dict):
+        """Advance one handoff record: (re)pick the decode target, host +
+        stage the pages that are ready but not yet hosted there, and flag
+        the record seatable when the final message lands."""
+        req = rec["req"]
+        rid = req.rid
+        if rec["dst"] is not None and not self.instances[rec["dst"]].alive:
+            # decode target died before seating: hosted pages died with its
+            # pool — re-target and re-stream from the source (which still
+            # holds everything)
+            rec.update(dst=None, inflight=0, ready_to_seat=False)
+            rec["gen"] += 1
+        if rec["dst"] is None:
+            rec["dst"] = self._pick_decode_target(inst.instance_id)
+        if rec["dst"] is None or rec["dst"] == inst.instance_id:
+            # no peer to decode on: colocated fallback — the parked slot
+            # seats right here once the final chunk has run
+            if rec.get("final"):
+                inst._seat(rec["slot"], req, rec["refs"], rec["logits"],
+                           self.t)
+                self.handoffs_seated += 1
+                del self._handoffs[rid]
+            return
+        dst = self.instances[rec["dst"]]
+        if rec.get("final"):
+            refs, ready = rec["refs"], len(rec["refs"])
+        else:
+            job = inst.prefill_jobs.get(inst.slot_of(rid))
+            if job is None:
+                return
+            refs, ready = job["refs"], job["pages_written"]
+        pc = self.ecfg.prefix_cache
+        reconcile_replica(inst.pool, dst.pool, inst.instance_id, rid,
+                          refs[:ready], prefix_cache=pc)
+        rtab = dst.pool.replica_table(inst.instance_id, rid)
+        src_slots: List[int] = []
+        dst_slots: List[int] = []
+        shared_copies = 0
+        if ready > len(rtab):
+            grown = host_table_growth(inst.pool, dst.pool, inst.instance_id,
+                                      rid, refs[:ready], prefix_cache=pc)
+            if grown is None:
+                return      # no headroom on the target yet; retry next step
+            self._commit_shared_hostings(rec["dst"], grown)
+            for s, d in grown.copies:
+                src_slots.append(s)
+                dst_slots.append(d)
+            shared_copies = len(grown.copies)
+            rtab = dst.pool.replica_table(inst.instance_id, rid)
+        # fresh private hostings carry rref.replicated == False — the same
+        # dirty walk replication uses picks exactly those up
+        s, d = collect_dirty(dst.pool, refs[:ready], rtab, full=False,
+                             prefix_cache=pc)
+        src_slots += s
+        dst_slots += d
+        blob_src: List[int] = []
+        blob_dst: List[int] = []
+        if rec.get("final") and inst.family == "hybrid":
+            if not dst.pool.host_blob_replica(inst.instance_id, rid):
+                return      # retry next step; KV pages stay hosted
+            rbref = dst.pool.blob_replica_ref(inst.instance_id, rid)
+            bref = inst.pool.blob_ref(rid)
+            if not rbref.replicated:
+                blob_src.append(bref.slot)
+                blob_dst.append(rbref.slot)
+                bref.replicated = True
+                rbref.replicated = True
+        if src_slots or blob_src:
+            gen = rec["gen"]
+
+            def landed(rec=rec, gen=gen):
+                if rec["gen"] == gen:
+                    rec["inflight"] -= 1
+            rec["inflight"] += 1
+            self.transport.stage(
+                "handoff", inst.instance_id, rec["dst"],
+                (src_slots, dst_slots), (blob_src, blob_dst),
+                shared_copies=shared_copies, on_shipped=landed)
+        if rec.get("final") and len(rtab) == len(refs) and \
+                (inst.family != "hybrid"
+                 or dst.pool.blob_replica_ref(inst.instance_id, rid)):
+            rec["ready_to_seat"] = True
+
+    def _complete_handoffs(self):
+        """Seat every handoff whose final pages have landed on a live
+        decode target, then release the prefill side's parked slot (its
+        pages stay warm in the source's prefix index)."""
+        for rid, rec in list(self._handoffs.items()):
+            if not (rec.get("ready_to_seat") and rec.get("inflight", 0) == 0):
+                continue
+            dst = self.instances[rec["dst"]]
+            if not dst.alive:
+                continue    # re-targeted by the next stream pass
+            if not dst.seat_handoff(rec["src"], rec["req"]):
+                continue    # no free slot on the target yet; retry
+            self.handoffs_seated += 1
+            src = self.instances[rec["src"]]
+            if src.alive:
+                src.finish_handoff(rid)
+            del self._handoffs[rid]
+
+    def disagg_stats(self) -> dict:
+        """Disaggregation accounting: handoff stream traffic (same wire
+        format as replication — check the bytes against block_nbytes) and
+        seat/resume counts for the /health endpoint and the bench."""
+        shipped = self.transport.shipped["handoff"]
+        return {
+            "enabled": self.ecfg.disaggregate,
+            "roles": {i.instance_id: i.role for i in self.instances},
+            "handoffs_in_flight": len(self._handoffs),
+            "handoffs_seated": self.handoffs_seated,
+            "handoff_streams_resumed": self.handoff_streams_resumed,
+            "handoff_blocks_total": shipped.blocks,
+            "handoff_blobs_total": shipped.blobs,
+            "handoff_bytes_total": shipped.bytes,
+            "handoff_shared_zero_copy_pages":
+                self.repl_shared_refs_total - shipped.shared_copies
+                - self.transport.shipped["repl"].shared_copies,
+        }
 
     def replication_stats(self) -> dict:
         steps = max(self.repl_steps, 1)
@@ -1105,10 +1476,57 @@ class RealEngine:
             "cow_copies": sum(i.pool.cow_copies for i in insts),
             "shared_replica_refs": self.repl_shared_refs_total,
             "shared_replica_copies": self.repl_shared_copies_total,
+            # denominator is the monotone hosting COUNTER, not the live key
+            # set: a target that failed and rejoined re-hosts (and re-ships)
+            # the same keys, and both sides of the ratio must see that
             "shared_page_ship_ratio":
                 self.repl_shared_copies_total
-                / max(len(self._shared_hosted_keys), 1),
+                / max(self.repl_shared_hostings_total, 1),
         }
+
+    def _handoffs_on_fail(self, instance_id: int, victims, resumed, event,
+                          standard: bool):
+        """Failover for in-flight prefill→decode handoffs.
+
+        A dead DECODE target costs nothing: the source still holds every
+        page, so the record re-targets and re-streams on the next pass. A
+        dead PREFILL source resumes on the instance its stream already
+        landed on — seated outright if the final chunk had arrived,
+        otherwise prefill restarts from the last fully streamed page
+        (chunk-aligned) instead of from token zero. Returns the victims
+        list with handoff requests (handled here) removed."""
+        handled = set()
+        for rid, rec in list(self._handoffs.items()):
+            if rec["dst"] == instance_id:
+                rec.update(dst=None, inflight=0, ready_to_seat=False)
+                rec["gen"] += 1
+            if rec["src"] != instance_id:
+                continue
+            req = rec["req"]
+            handled.add(rid)
+            dst = None if rec["dst"] is None else self.instances[rec["dst"]]
+            ok = False
+            if not standard and dst is not None and dst.alive:
+                if rec.get("ready_to_seat") and rec.get("inflight", 0) == 0:
+                    ok = dst.seat_handoff(instance_id, req)
+                    if ok:
+                        self.handoffs_seated += 1
+                else:
+                    ok = dst.adopt_prefill_stream(instance_id, req)
+                    if ok:
+                        self.handoff_streams_resumed += 1
+                if not ok:
+                    dst.pool.drop_replica(instance_id, rid)
+            if ok:
+                resumed.append(rid)
+                event["resumed"] += 1
+            else:
+                req.restart()
+                req.state = RequestState.QUEUED
+                event["restarted"] += 1
+                self._route(req, front=True)
+            del self._handoffs[rid]
+        return [r for r in victims if r.rid not in handled]
 
     def fail_instance(self, instance_id: int) -> List[int]:
         """Kill an instance and run the configured recovery policy.
@@ -1136,8 +1554,10 @@ class RealEngine:
             self.t = self.clock()
         # async-replication barrier: the last step's staged delta must land
         # on the hosts before any replica is promoted or dropped, or
-        # failover would resume from one-step-stale bytes
-        self.flush_replication()
+        # failover would resume from one-step-stale bytes. Copies INTO the
+        # dying instance are dropped, not shipped — its pool is about to be
+        # discarded, so those bytes never become real
+        self.flush_replication(exclude=instance_id)
         standard = self.ecfg.recovery == "standard"
         victims = list(inst.requests.values())
         drained = self.queues[instance_id]
@@ -1149,6 +1569,9 @@ class RealEngine:
                  "t_rejoin": -1.0, "mttr": -1.0}
         self.failure_events.append(event)
         resumed = []
+        if self._handoffs:
+            victims = self._handoffs_on_fail(instance_id, victims, resumed,
+                                             event, standard)
         for req in victims:
             meta = self.replica_meta.pop(req.rid, None)
             target = None
@@ -1181,6 +1604,13 @@ class RealEngine:
                     for ref in other.pool.table(rid):
                         ref.replicated = False
                     other.pool.mark_blob_dirty(rid)
+        # the dead pool's interned pages died with it: forget its hosting
+        # keys so a re-host after rejoin counts as a fresh hosting AND a
+        # fresh copy — the ship-ratio denominator tracks live state instead
+        # of drifting across failure cycles
+        self._shared_hosted_keys = {
+            (t, k) for (t, k) in self._shared_hosted_keys
+            if t != instance_id}
         if standard:
             # classic fault path: the group re-initializes together —
             # nothing serves until the weights are back
@@ -1208,9 +1638,14 @@ class RealEngine:
         self._pending_rejoins = [(i, t) for i, t in self._pending_rejoins
                                  if i != instance_id]
         inst = RealInstance(self.cfg, self.params, self.ecfg, instance_id,
-                            executor=self.executor, clock=self.clock)
+                            executor=self.executor, clock=self.clock,
+                            role=self.roles[instance_id])
         self.instances[instance_id] = inst
         self.queues[instance_id] = []
+        # fresh pool, no hosted keys (defensive: fail_instance pruned these)
+        self._shared_hosted_keys = {
+            (t, k) for (t, k) in self._shared_hosted_keys
+            if t != instance_id}
         for event in reversed(self.failure_events):
             if event["instance"] == instance_id and event["t_rejoin"] < 0:
                 event["t_rejoin"] = self.t

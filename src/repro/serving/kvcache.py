@@ -446,6 +446,31 @@ class PagedKVPool:
                 return True
         return False
 
+    def unhost_tail(self, peer: int, rid: int, n: int,
+                    fresh_keys: Iterable[bytes] = ()):
+        """Undo the LAST ``n`` hosted blocks of (peer, rid) — the
+        all-or-nothing staging rollback. Private slots return to the free
+        list; shared pages are deref'd through ``_release_slot``. A shared
+        page interned BY the rolled-back hosting (its key in
+        ``fresh_keys``: the entry is fresh and its bytes never shipped) is
+        fully evicted once its refcount returns to 0, so no future lookup
+        can attach a page whose copy never landed."""
+        table = self._replica_tables.get((peer, rid), [])
+        assert len(table) >= n, "unhosting more blocks than were hosted"
+        fresh = set(fresh_keys)
+        for _ in range(n):
+            ref = table.pop()
+            key = self._slot_prefix.get(ref.slot)
+            self._release_slot(ref.slot)
+            if key is not None and key in fresh:
+                entry = self.prefix_index.get(key)
+                if entry is not None and entry.refcount == 0:
+                    self._evict_prefix_entry(entry)
+                    self.prefix_hosted_pages -= 1
+                    self.prefix_evicted_pages -= 1   # never a real page
+        if not table:
+            self._replica_tables.pop((peer, rid), None)
+
     def drop_replica(self, peer: int, rid: int):
         for ref in self._replica_tables.pop((peer, rid), []):
             self._release_slot(ref.slot)

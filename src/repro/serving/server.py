@@ -111,9 +111,11 @@ class EngineService:
             return {
                 "instances": [
                     {"id": i.instance_id, "alive": i.alive,
+                     "role": i.role,
                      "active": len(i.requests),
                      "queued": len(eng.queues[i.instance_id]),
                      "prefilling": i.prefill_depth(),
+                     "handoffs_ready": len(i.ready_handoffs),
                      "pool_used_blocks": i.pool.n_used,
                      "pool_replica_blocks": i.pool.replica_blocks_used()}
                     for i in eng.instances],
@@ -123,6 +125,7 @@ class EngineService:
                 "failure_events": [dict(e) for e in eng.failure_events],
                 "replication": eng.replication_stats(),
                 "prefix": eng.prefix_stats(),
+                "disagg": eng.disagg_stats(),
             }
 
     def shutdown(self):
@@ -232,6 +235,11 @@ def main():
                     help="chunked prefill: run prompts through the pool in "
                          "chunks of this many tokens, interleaved with "
                          "decode steps (0 = monolithic prefill)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode disaggregation: the first half of "
+                         "the instances run chunked prefill only and stream "
+                         "finished KV pages to decode-role peers (implies "
+                         "--prefill-chunk; defaults it to 8 if unset)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="intern fully-covered prompt pages in a refcounted "
                          "prefix index; shared prefixes attach by reference "
@@ -243,12 +251,15 @@ def main():
         cfg = cfg.reduced()
     # sliding-window archs serve any max_seq (block recycling keeps only
     # the attention window resident) — no capping needed
+    if args.disaggregate and args.prefill_chunk <= 0:
+        args.prefill_chunk = 8      # streaming needs chunked prefill
     ecfg = EngineConfig(kv_quant=args.kv_quant, recovery=args.recovery,
                         auto_rejoin=args.auto_rejoin,
                         rejoin_delay=args.rejoin_delay,
                         reload_penalty=args.reload_penalty,
                         prefill_chunk=args.prefill_chunk,
                         prefix_cache=args.prefix_cache,
+                        disaggregate=args.disaggregate,
                         replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "

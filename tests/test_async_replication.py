@@ -52,7 +52,10 @@ def test_async_stages_then_flush_lands_bytes(cfg):
     assert eng.ecfg.repl_async
     pairs = _pairs(eng)
     assert pairs, "prompt pages must be staged on the first pass"
-    assert eng.repl_blocks_total == len(pairs)      # accounted at stage time
+    # staged totals stamp at stage time; SHIPPED totals only at the flush —
+    # bytes that never land (dead target) must never count as shipped
+    assert eng.repl_blocks_staged == len(pairs)
+    assert eng.repl_blocks_total == 0
     for src, dst, s, d in pairs:
         for a in dst.read_block(d):
             assert not np.asarray(a).any(), \
@@ -83,6 +86,33 @@ def test_sync_mode_ships_in_step(cfg):
             for a, b in zip(src.pool.read_block(ref.slot),
                             dst.pool.read_block(rref.slot)):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dead_target_bytes_never_counted_as_shipped(cfg):
+    """Regression (accounting bugfix): a delta staged toward a ring target
+    that dies before the flush is DROPPED — the copy never executes, and
+    its bytes must stay out of the shipped totals (they used to be stamped
+    at stage time, over-counting replication traffic under failure).
+    Shipped + dropped must exactly reconcile against staged."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64),
+                     n_instances=3, seed=0)
+    for r in _reqs(cfg, 6):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    doomed = sum(m["nbytes"] for m in eng._pending_ship if m["dst"] == 1)
+    assert doomed > 0, "ring 0->1 must have a staged, unshipped delta"
+    landed_before = eng.repl_bytes_total
+    eng.fail_instance(1)            # barrier flush runs with target 1 dying
+    assert eng.repl_bytes_total > landed_before, \
+        "deltas toward the survivors must still land at the barrier"
+    assert eng.repl_bytes_dropped == doomed
+    assert eng.repl_bytes_total + eng.repl_bytes_dropped \
+        == eng.repl_bytes_staged, "every staged byte is shipped XOR dropped"
+    eng.run(500)
+    assert not eng.has_pending()
+    assert eng.repl_bytes_total + eng.repl_bytes_dropped \
+        == eng.repl_bytes_staged
 
 
 @pytest.mark.parametrize("kv_quant", [False, True])

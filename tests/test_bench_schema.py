@@ -20,6 +20,24 @@ def _mode(mttr, ttft_p99=0.5):
             "goodput_tok_s": 40.0}
 
 
+def _nofail(n=10, ttft=0.1):
+    return {"n": n, "ttft_avg": ttft, "ttft_p99": 2 * ttft,
+            "latency_avg": 0.5, "goodput_tok_s": 50.0}
+
+
+def _valid_disagg():
+    dis = _nofail(ttft=0.08)
+    dis["handoff"] = {"handoffs_seated": 13, "handoff_blocks_total": 24,
+                      "handoff_blobs_total": 0,
+                      "handoff_bytes_total": 196608}
+    dis["roles"] = {"0": "prefill", "1": "decode"}
+    return {"profile": "tiny", "n_instances": 2,
+            "families": {"dense": {"arch": "llama3-8b",
+                                   "colocated": _nofail(ttft=0.1),
+                                   "disagg": dis,
+                                   "ttft_ratio_x": 0.8}}}
+
+
 def _valid_latency():
     fams = {}
     for fam in ("dense", "moe", "hybrid"):
@@ -30,7 +48,8 @@ def _valid_latency():
                      "kevlarflow": kf,
                      "standard": _mode(4.0, ttft_p99=1.6),
                      "ratios": {"mttr_x": 20.0, "goodput_tok_x": 1.3}}
-    return {"meta": {"profile": "tiny"}, "families": fams}
+    return {"meta": {"profile": "tiny"}, "families": fams,
+            "disagg": _valid_disagg()}
 
 
 def _check(tmp_path, payload):
@@ -115,6 +134,44 @@ def test_missing_file_flagged(tmp_path):
     problems = []
     check_bench.check_latency(str(tmp_path / "nope.json"), problems)
     assert problems
+
+
+def test_missing_disagg_section_flagged(tmp_path):
+    payload = _valid_latency()
+    del payload["disagg"]
+    assert any("disagg section missing" in p
+               for p in _check(tmp_path, payload))
+
+
+def test_disagg_ttft_ratio_gated(tmp_path):
+    """ISSUE 8 acceptance bar: disaggregated TTFT beyond 1.2x colocated
+    turns bench-check red."""
+    payload = _valid_latency()
+    payload["disagg"]["families"]["dense"]["ttft_ratio_x"] = 1.45
+    problems = _check(tmp_path, payload)
+    assert any("1.45x" in p and "1.2x" in p for p in problems)
+    payload = _valid_latency()
+    del payload["disagg"]["families"]["dense"]["ttft_ratio_x"]
+    assert any("ttft_ratio_x" in p for p in _check(tmp_path, payload))
+
+
+def test_disagg_must_actually_stream_flagged(tmp_path):
+    """A disagg run whose handoff counters are zero (or that seated fewer
+    handoffs than it completed requests) never exercised the wire."""
+    payload = _valid_latency()
+    payload["disagg"]["families"]["dense"]["disagg"]["handoff"][
+        "handoff_bytes_total"] = 0
+    assert any("no KV actually streamed" in p
+               for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    payload["disagg"]["families"]["dense"]["disagg"]["handoff"][
+        "handoffs_seated"] = 3              # < n=10 completed
+    assert any("without riding the wire" in p
+               for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    payload["disagg"]["families"]["dense"]["disagg"]["roles"] = {
+        "0": "prefill", "1": "prefill"}
+    assert any("roles" in p for p in _check(tmp_path, payload))
 
 
 def _valid_prefix():

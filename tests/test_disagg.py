@@ -1,0 +1,235 @@
+"""Prefill/decode disaggregation (``EngineConfig.disaggregate=True``):
+prefill-role instances run chunked prefill only and stream each finished
+page over the replication transport to a decode-role peer, which seats the
+request when the final chunk's pages land. Disaggregation is a PLACEMENT
+change, never a numerics change: token streams and raw prompt-page bytes
+(int8 payload + scales when quantized) must be identical to colocated
+serving for all three families, and the streams must survive killing
+either side of the handoff mid-flight."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request, RequestState
+
+ARCHS = ["llama3-8b", "mixtral-8x7b", "recurrentgemma-9b"]
+
+
+def _mk_reqs(cfg, lens, out, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt_len=n, max_new_tokens=out,
+                    arrival_time=0.0,
+                    prompt_tokens=rng.integers(1, cfg.vocab_size, n).tolist())
+            for i, n in enumerate(lens)]
+
+
+def _capture_pages(eng, req, kv_quant):
+    """Prompt-row page bytes for ``req`` from whichever pool holds it."""
+    for inst in eng.instances:
+        if not inst.alive or req.rid not in inst.pool.live_requests():
+            continue
+        page = inst.pool.page_size
+        pages = {}
+        for ref in inst.pool.table(req.rid):
+            valid = min(page, req.prompt_len - ref.logical_idx * page)
+            if valid <= 0:
+                continue
+            raw = (inst.pool.read_block_quantized(ref.slot)
+                   if kv_quant else inst.pool.read_block(ref.slot))
+            pages[ref.logical_idx] = [
+                np.asarray(a[:, :, :valid], np.float32) for a in raw]
+        return inst.instance_id, pages
+    return None, None
+
+
+def _run(arch, kv_quant, disagg, lens=(27, 8, 27), out=6, capture_rid=0):
+    """Run to completion; snapshot the captured request's prompt pages the
+    moment it enters DECODE — on the decode-role peer when disaggregated."""
+    cfg = get_config(arch).reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefill_chunk=8, kv_quant=kv_quant,
+                                       disaggregate=disagg),
+                     n_instances=2, seed=0)
+    reqs = _mk_reqs(cfg, lens, out)
+    for r in reqs:
+        eng.submit(r)
+    seated_on = pages = None
+    for _ in range(500):
+        if not eng.has_pending():
+            break
+        eng.step()
+        req = reqs[capture_rid]
+        if pages is None and req.state in (RequestState.DECODE,
+                                           RequestState.DONE):
+            seated_on, pages = _capture_pages(eng, req, kv_quant)
+    assert not eng.has_pending()
+    assert pages is not None
+    return eng, reqs, seated_on, pages
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_byte_identical_to_colocated(arch, kv_quant):
+    """The headline contract: disaggregated serving emits the exact token
+    streams of colocated serving, and the prompt pages the decode instance
+    received over the wire are byte-identical to the pages colocated
+    prefill writes locally (raw int8 payload + scales when quantized)."""
+    _, colo, _, colo_pages = _run(arch, kv_quant, disagg=False)
+    eng, dis, seated_on, dis_pages = _run(arch, kv_quant, disagg=True)
+    assert [r.output_tokens for r in dis] == \
+        [r.output_tokens for r in colo]
+    assert set(dis_pages) == set(colo_pages)
+    for logical in colo_pages:
+        for a, b in zip(colo_pages[logical], dis_pages[logical]):
+            np.testing.assert_array_equal(a, b)
+    # the captured request really decoded on the decode-role instance,
+    # i.e. the bytes compared above rode the wire
+    assert seated_on == 1 and eng.roles[1] == "decode"
+    assert eng.handoffs_seated == len(dis)
+    assert eng.disagg_stats()["handoff_blocks_total"] > 0
+
+
+def test_roles_routing_and_stats():
+    """Admission goes to prefill-role instances only; every request decodes
+    on the decode side; /health surfaces roles + handoff accounting; the
+    handoff byte total is exact (blocks * block_nbytes)."""
+    cfg = get_config("llama3-8b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefill_chunk=8, disaggregate=True),
+                     n_instances=2, seed=0)
+    reqs = _mk_reqs(cfg, (12, 12, 12), out=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    # arrivals admitted on the prefill instance, none on decode
+    assert len(eng.instances[0].requests) == 3
+    assert not eng.instances[1].requests
+    eng.run(300)
+    assert all(r.instance_id == 1 for r in reqs), \
+        "every request must finish on the decode-role instance"
+    st = eng.disagg_stats()
+    assert st["enabled"] and st["roles"] == {0: "prefill", 1: "decode"}
+    assert st["handoffs_seated"] == 3 and st["handoffs_in_flight"] == 0
+    shipped = eng.transport.shipped["handoff"]
+    assert st["handoff_bytes_total"] == \
+        shipped.blocks * eng.instances[0].pool.block_nbytes \
+        + shipped.blobs * eng.instances[0].pool.blob_nbytes
+
+
+def test_disagg_requires_chunking_and_peers():
+    cfg = get_config("llama3-8b").reduced()
+    with pytest.raises(ValueError):
+        RealEngine(cfg, EngineConfig(disaggregate=True, prefill_chunk=8),
+                   n_instances=1)
+    with pytest.raises(ValueError):
+        RealEngine(cfg, EngineConfig(disaggregate=True, prefill_chunk=0),
+                   n_instances=2)
+
+
+def test_prefix_handoff_interns_instead_of_copies():
+    """A prefix-cached page crosses the wire AT MOST ONCE: the first
+    request streams its pages and both sides intern them at completion;
+    a later request sharing the prefix attaches by reference on the
+    prefill side and the handoff sends the CHAIN KEY — the decode side
+    interns its existing page (zero copy), so only the non-shared tail
+    page ships."""
+    cfg = get_config("llama3-8b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefill_chunk=8, disaggregate=True,
+                                       prefix_cache=True, replicate=False),
+                     n_instances=2, seed=0)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, 27).tolist()
+    a = Request(rid=0, prompt_len=27, max_new_tokens=4, arrival_time=0.0,
+                prompt_tokens=list(prompt))
+    eng.submit(a)
+    eng.run(300)
+    first = eng.transport.shipped["handoff"].blocks
+    assert first >= 4                    # 3 full prompt pages + tail page
+    b = Request(rid=1, prompt_len=27, max_new_tokens=4, arrival_time=0.0,
+                prompt_tokens=list(prompt))
+    eng.submit(b)
+    eng.run(300)
+    assert b.output_tokens == a.output_tokens
+    delta = eng.transport.shipped["handoff"].blocks - first
+    assert delta == 1, \
+        f"only the tail page should ride the wire for a cached prefix " \
+        f"(shipped {delta} blocks)"
+    # with ring replication off, the shared-page stats are handoff-only:
+    # 3 references, 0 copies — and the ship ratio can't exceed 1
+    assert eng.repl_shared_refs_total == 3
+    assert eng.repl_shared_copies_total == 0
+    assert eng.prefix_stats()["shared_page_ship_ratio"] <= 1.0
+
+
+def _chaos_run(arch, kv_quant, kill, n_instances=2, lens=(27, 27, 8),
+               out=8):
+    """Serve with a mid-flight kill: ``kill='prefill'`` fails the streaming
+    source once pages have shipped; ``kill='decode'`` fails the handoff
+    target before any seat. Returns the engine + requests."""
+    cfg = get_config(arch).reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefill_chunk=8, kv_quant=kv_quant,
+                                       disaggregate=True),
+                     n_instances=n_instances, seed=0)
+    reqs = _mk_reqs(cfg, lens, out)
+    for r in reqs:
+        eng.submit(r)
+    killed = False
+    steps = 0
+    while eng.has_pending() and steps < 500:
+        eng.step()
+        steps += 1
+        if not killed and kill == "prefill" and \
+                eng.transport.shipped["handoff"].blocks > 0 and \
+                eng.instances[0].prefill_jobs:
+            eng.fail_instance(0)        # source dies mid-stream
+            killed = True
+        elif not killed and kill == "decode":
+            tgt = next((rec["dst"] for rec in eng._handoffs.values()
+                        if rec["dst"] is not None
+                        and not rec.get("ready_to_seat")), None)
+            if tgt is not None and eng.handoffs_seated == 0:
+                eng.fail_instance(tgt)  # target dies holding shipped pages
+                killed = True
+    assert not eng.has_pending() and killed
+    return eng, reqs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_prefill_kill_chaos_drill(arch, kv_quant):
+    """Kill the prefill instance while its pages are mid-stream. The
+    survivor holds every page that shipped: where chunk-buffer seeding is
+    exact (attention families, float pool) prefill RESUMES from the last
+    streamed page; elsewhere (hybrid carry, int8 pool) the request
+    restarts from scratch — either way every token stream is identical to
+    the failure-free run."""
+    _, normal, _, _ = _run(arch, kv_quant, disagg=True,
+                           lens=(27, 27, 8), out=8)
+    eng, failed = _chaos_run(arch, kv_quant, kill="prefill")
+    assert [r.output_tokens for r in failed] == \
+        [r.output_tokens for r in normal]
+    if arch != "recurrentgemma-9b" and not kv_quant:
+        assert eng.handoff_streams_resumed > 0, \
+            "mid-stream prefill death must resume from streamed pages"
+        assert any(r.n_retries == 0 and r.n_migrations > 0 for r in failed)
+    assert not eng._handoffs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_decode_kill_chaos_drill(arch, kv_quant):
+    """Kill the decode target before any request seats (3 instances: the
+    stream re-targets the surviving decode peer and replays from the
+    source, which lost nothing). Token streams identical to no-failure."""
+    _, normal, _, _ = _run(arch, kv_quant, disagg=True,
+                           lens=(27, 27, 8), out=8)
+    eng, failed = _chaos_run(arch, kv_quant, kill="decode", n_instances=3)
+    assert [r.output_tokens for r in failed] == \
+        [r.output_tokens for r in normal]
+    assert eng.handoffs_seated >= len(failed)
+    assert not eng._handoffs

@@ -38,7 +38,7 @@ try:
 except ImportError:                     # the numpy sweep still runs
     HAVE_HYPOTHESIS = False
 
-from repro.serving.kvcache import PagedKVPool
+from repro.serving.kvcache import PagedKVPool, PrefixPage
 
 
 @pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis installed")
@@ -375,7 +375,7 @@ class PoolActions:
     ACTIONS = ("allocate", "allocate_pressure", "append", "recycle",
                "free_one", "host_replica", "retire", "promote", "evict",
                "evict_blobs", "replicate_pass", "allocate_shared", "intern",
-               "evict_prefixes", "host_shared")
+               "evict_prefixes", "host_shared", "host_grow_rollback")
 
     def __init__(self):
         self.pool = PagedKVPool(n_blocks=self.N_BLOCKS, page_size=self.PAGE,
@@ -537,6 +537,45 @@ class PoolActions:
                                           e.logical_idx)
         if res is not None:
             self._track([res[0]])
+
+    def host_grow_rollback(self, idx=0, n=1, **_):
+        """The engine's all-or-nothing staging bail: host a mix of shared
+        pages (resident AND foreign — the latter intern fresh entries whose
+        bytes never ship) and private blocks for a fresh peer rid, then
+        roll the whole thing back with ``unhost_tail``. The invariants
+        after this action are the half-staged-rid regression: no refcount
+        residue, no leaked slot, and no warm-but-garbage fresh entry."""
+        from repro.serving.kvcache import PREFIX_ROOT
+        self.peer_rid += 1
+        rid = self.peer_rid
+        entries = sorted(self.pool.prefix_index.values(),
+                         key=lambda e: e.key)
+        hosted, fresh = 0, []
+        for j in range(n + 1):
+            kind = (idx + j) % 3
+            if kind == 0 and entries:       # resident shared: refcount++
+                e = entries[(idx + j) % len(entries)]
+                res = self.pool.host_shared_block(97, rid, e, e.logical_idx)
+            elif kind == 1:                 # foreign shared: fresh intern
+                src = PrefixPage(b"foreign-%d-%d" % (rid, j), PREFIX_ROOT,
+                                 (idx, j), -1, 0)
+                res = self.pool.host_shared_block(97, rid, src, j)
+            else:                           # private hosted slot
+                res = (self.pool.host_replica(97, rid, 1, first_logical=j)
+                       or None)
+            if res is None:
+                break
+            if res is not True:
+                ref, needs_copy = res
+                self._track([ref])
+                if needs_copy:
+                    fresh.append(self.pool._slot_prefix[ref.slot])
+            hosted += 1
+        self.pool.unhost_tail(97, rid, hosted, fresh_keys=fresh)
+        assert (97, rid) not in self.pool._replica_tables
+        for key in fresh:
+            assert key not in self.pool.prefix_index, \
+                "rolled-back fresh intern left a garbage warm page"
 
     # -- invariants ----------------------------------------------------------
     def check_no_slot_leak_or_double_book(self):
@@ -778,6 +817,10 @@ if HAVE_HYPOTHESIS:
         @rule(idx=st.integers(0, 7))
         def host_shared(self, idx):
             self.m.host_shared(idx=idx)
+
+        @rule(idx=st.integers(0, 7), n=st.integers(1, 4))
+        def host_grow_rollback(self, idx, n):
+            self.m.host_grow_rollback(idx=idx, n=n)
 
         @invariant()
         def pool_invariants(self):

@@ -178,6 +178,46 @@ def test_mid_page_divergence_cow_keeps_shared_bytes(arch="llama3-8b"):
     assert warm_toks == cold_toks
 
 
+def test_ship_ratio_exact_across_kill_and_rejoin():
+    """Regression (accounting bugfix): the shared-page ship ratio's
+    denominator must count hosting EVENTS, not the live key set. A target
+    that fails and rejoins with a fresh pool legitimately re-hosts AND
+    re-ships the same chain keys — both sides of the ratio must move
+    together. Before the fix the dead target's (target, key) entries were
+    never pruned, so the second shipment divided by the stale first-cycle
+    denominator and the ratio drifted past check_bench's gate."""
+    cfg = get_config("llama3-8b").reduced()
+    eng = RealEngine(cfg, EngineConfig(max_slots=4, max_seq=64,
+                                       prefix_cache=True),
+                     n_instances=2, seed=0)
+    rng = np.random.default_rng(3)
+    shared = rng.integers(1, 1024, 16).tolist()     # two full prefix pages
+
+    def serve(rid):
+        req = _mk_req(rid, shared + [100 + rid], 6)
+        eng.submit(req)
+        eng.run(400)
+        assert not eng.has_pending()
+        return req
+
+    serve(0)            # on instance 0; replication interns pages on 1
+    assert eng.repl_shared_hostings_total == 2
+    assert eng.repl_shared_copies_total == 2        # fresh target: 2 ships
+    assert eng.prefix_stats()["shared_page_ship_ratio"] == 1.0
+    eng.fail_instance(1)
+    eng.rejoin_instance(1)
+    serve(10)           # same prefix; the rejoined pool must re-receive it
+    assert eng.repl_shared_copies_total == 4
+    assert eng.repl_shared_hostings_total == 4, \
+        "re-hosting on the rejoined fresh pool must count as new hostings"
+    assert eng.prefix_stats()["shared_page_ship_ratio"] == 1.0
+    # second failure cycle: the ratio stays exact, it does not drift
+    eng.fail_instance(1)
+    eng.rejoin_instance(1)
+    serve(20)
+    assert eng.prefix_stats()["shared_page_ship_ratio"] == 1.0
+
+
 # -- chaos drill: kill an instance while N requests share a prefix page -----
 
 def _shared_failover_run(kv_quant, fail_at, out=10):

@@ -19,6 +19,14 @@ Checks, per file:
     steady-state goodput (ROADMAP open item 1's exit criterion) — and the
     kevlarflow run's TPOT/TTFT sweep sections present and well-formed.
 
+``BENCH_latency.json`` (``disagg`` section, from ``--disagg``)
+  * colocated vs disaggregated no-failure pairs with finite TTFT/latency
+    numbers and n > 0 on both sides;
+  * the disagg run actually streamed (handoffs seated >= completed
+    requests, handoff blocks/bytes > 0, roles prefill+decode);
+  * ``ttft_ratio_x <= 1.2`` — splitting prefill from decode must not tax
+    time-to-first-token beyond 20% under no-failure load.
+
 ``BENCH_paged.json``
   * replication-traffic sections for all three archs with full/delta/int8
     modes and a delta reduction factor > 1;
@@ -118,6 +126,70 @@ def check_latency(path: str, problems: list):
                 problems.append(
                     f"{name}: {fam}.kevlarflow.sweeps.{sweep} missing or "
                     "malformed")
+    check_disagg(name, data.get("disagg"), problems)
+
+
+def check_disagg(name: str, disagg, problems: list):
+    """ISSUE 8 acceptance gate: the prefill/decode disaggregation pair must
+    be present, the disaggregated run must have actually streamed its KV
+    over the handoff channel, and its TTFT must stay within 1.2x of the
+    colocated run under no-failure load — disaggregation is a placement
+    change, not a latency tax."""
+    if not isinstance(disagg, dict):
+        problems.append(f"{name}: disagg section missing "
+                        "(run `bench_latency --disagg`)")
+        return
+    fams = disagg.get("families")
+    if not isinstance(fams, dict) or not fams:
+        problems.append(f"{name}: disagg.families missing or empty")
+        return
+    for fam, per in fams.items():
+        for side in ("colocated", "disagg"):
+            m = per.get(side)
+            if not isinstance(m, dict):
+                problems.append(f"{name}: disagg.{fam}.{side} missing")
+                continue
+            if not m.get("n"):
+                problems.append(
+                    f"{name}: disagg.{fam}.{side} completed 0 requests")
+            for key in ("ttft_avg", "ttft_p99", "latency_avg",
+                        "goodput_tok_s"):
+                if not _num(m.get(key)) or m[key] < 0:
+                    problems.append(
+                        f"{name}: disagg.{fam}.{side}.{key} not a finite "
+                        f"non-negative number: {m.get(key)!r}")
+        dis = per.get("disagg", {})
+        hand = dis.get("handoff") if isinstance(dis, dict) else None
+        if not isinstance(hand, dict):
+            problems.append(f"{name}: disagg.{fam}.disagg.handoff missing")
+        else:
+            # warmup requests ride the wire too, so seated >= measured n
+            seated = hand.get("handoffs_seated")
+            if not _num(seated) or seated < (dis.get("n") or 0):
+                problems.append(
+                    f"{name}: disagg.{fam}: handoffs_seated ({seated!r}) < "
+                    f"completed requests ({dis.get('n')!r}) — some request "
+                    "decoded without riding the wire")
+            for key in ("handoff_blocks_total", "handoff_bytes_total"):
+                if not _num(hand.get(key)) or hand[key] <= 0:
+                    problems.append(
+                        f"{name}: disagg.{fam}.handoff.{key} not positive: "
+                        f"{hand.get(key)!r} — no KV actually streamed")
+        roles = dis.get("roles", {}) if isinstance(dis, dict) else {}
+        if sorted(set(roles.values())) != ["decode", "prefill"]:
+            problems.append(
+                f"{name}: disagg.{fam}.disagg.roles must contain both a "
+                f"prefill and a decode instance: {roles!r}")
+        ratio = per.get("ttft_ratio_x")
+        if not _num(ratio):
+            problems.append(
+                f"{name}: disagg.{fam}.ttft_ratio_x not a finite number: "
+                f"{ratio!r}")
+        elif ratio > 1.2:
+            problems.append(
+                f"{name}: disagg.{fam}: disaggregated TTFT is {ratio}x "
+                "colocated (gate is <= 1.2x) — the handoff is taxing "
+                "time-to-first-token")
 
 
 def check_paged(path: str, problems: list):
