@@ -24,15 +24,18 @@ bench-paged:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead
 
 # MTTR / TTFT / goodput under an injected failure, kevlarflow vs standard,
-# plus the colocated-vs-disaggregated no-failure TTFT pair
+# plus the colocated-vs-disaggregated no-failure TTFT pair and the
+# 12-instance fleet scenario matrix
 bench-latency:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --disagg
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet
 
 # CI smoke: regenerate bench output in fast modes, then schema-check it
 bench-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny --disagg
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet --tiny
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead --fast
 	$(MAKE) bench-check
 

@@ -3,8 +3,20 @@ three failure scenarios:
   1: 8-node (2x4), one node fails
   2: 16-node (4x4), one node fails
   3: 16-node (4x4), two nodes fail (two pipelines)
+
+``--fleet`` runs the FLEET SCENARIO MATRIX instead: the real tick-clock
+``RealEngine`` at 8-12 instances under {single kill, correlated 3-instance
+kill, storm-during-rejoin} x {kevlarflow, standard}, merged into
+``BENCH_latency.json`` as the ``scenario_matrix`` section that
+``make bench-check`` gates (no dropped requests in any cell; kevlarflow
+strictly better per scenario).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
 
 from benchmarks.common import emit, fmt_row, run_scenario
 
@@ -16,6 +28,134 @@ SCENES = {
     2: dict(n_instances=4, fail_nodes=[2]),
     3: dict(n_instances=4, fail_nodes=[2, 9]),   # two different pipelines
 }
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_latency.json")
+
+# Fleet matrix run shapes. The engine runs on its TICK clock (one tick per
+# step) — deterministic, so CI results don't wobble with machine load —
+# and every time knob below (rejoin_delay, reload_penalty, latency) is in
+# ticks. The reload:rejoin ratio (6x) keeps the standard-mode stall the
+# dominant cost, same story as the wall-clock harness.
+FLEET_PROFILES = {
+    "tiny": dict(n_instances=8, n_requests=24, prompt_max=16, max_new=6,
+                 rejoin_delay=4.0, reload_penalty=24.0,
+                 max_slots=4, max_seq=64),
+    "full": dict(n_instances=12, n_requests=48, prompt_max=20, max_new=8,
+                 rejoin_delay=4.0, reload_penalty=24.0,
+                 max_slots=4, max_seq=64),
+}
+
+FLEET_SCENARIOS = ("single_kill", "correlated_kill_3", "storm_during_rejoin")
+FLEET_HEADER = ("bench,scenario,mode,n,dropped,latency_avg,latency_p99,"
+                "ttft_avg,mttr_avg,kills,resumed,restarted,epoch")
+
+
+def _fleet_cell(cfg, mode: str, scenario: str, prof: dict,
+                seed: int = 0) -> Dict:
+    """One matrix cell: a tick-clock fleet run of ``scenario`` under
+    ``mode``. All requests arrive at t=0 (the failure hits a loaded
+    fleet); the run drains through every kill, rejoin, and re-kill."""
+    import numpy as np
+
+    from repro.serving.engine import EngineConfig, RealEngine
+    from repro.serving.request import Request, summarize
+
+    ecfg = EngineConfig(
+        max_slots=prof["max_slots"], max_seq=prof["max_seq"],
+        recovery=mode, replicate=(mode == "kevlarflow"),
+        auto_rejoin=True, rejoin_delay=prof["rejoin_delay"],
+        reload_penalty=prof["reload_penalty"],
+        placement="rendezvous")     # the fleet-scale policy under test
+    eng = RealEngine(cfg, ecfg, n_instances=prof["n_instances"])
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(prof["n_requests"]):
+        n = int(rng.integers(4, prof["prompt_max"]))
+        reqs.append(Request(
+            rid=rid, prompt_len=n,
+            max_new_tokens=int(rng.integers(2, prof["max_new"])),
+            arrival_time=0.0,
+            prompt_tokens=rng.integers(1, cfg.vocab_size, n).tolist()))
+    for r in reqs:
+        eng.submit(r)
+    # kill schedule: tick -> instance ids (kills land on a loaded fleet)
+    kills = {2.0: [0, 1, 2]} if scenario == "correlated_kill_3" \
+        else {2.0: [0]}
+    if scenario == "storm_during_rejoin":
+        kills[3.0] = [1]            # second kill during 0's queue drain
+    rekill_pending = scenario == "storm_during_rejoin"
+    steps = 0
+    while (eng.has_pending() or eng.recovery_pending()) and steps < 4000:
+        for t_kill in sorted(kills):
+            if eng.t >= t_kill:
+                for iid in kills.pop(t_kill):
+                    if eng.instances[iid].alive:
+                        eng.fail_instance(iid)
+        if rekill_pending and eng.instances[0].alive and any(
+                e["instance"] == 0 and e["t_rejoin"] >= 0
+                for e in eng.failure_events):
+            # the storm's signature move: the spare dies again right
+            # after rejoining — the planner just reschedules it
+            eng.fail_instance(0)
+            rekill_pending = False
+        eng.step()
+        steps += 1
+    m = summarize(eng.done, span=max(eng.t, 1e-9))
+    events = eng.mttr_events()
+    m.update({
+        "n_submitted": len(reqs),
+        "dropped": len(reqs) - len(eng.done),
+        "mttr_avg": round(float(np.mean([e["mttr"] for e in events])), 3)
+        if events else -1.0,
+        "kills": len(eng.failure_events),
+        "resumed": sum(e["resumed"] for e in eng.failure_events),
+        "restarted": sum(e["restarted"] for e in eng.failure_events),
+        "epoch_final": eng.control.view.epoch,
+        "ticks": eng.t,
+    })
+    return m
+
+
+def main_fleet(fast: bool = True, profile: str = None):
+    """--fleet entry: the scenario matrix, merged into BENCH_latency.json
+    as the ``scenario_matrix`` section (all other sections preserved)."""
+    from repro.configs import get_config
+
+    profile = profile or ("tiny" if fast else "full")
+    prof = FLEET_PROFILES[profile]
+    cfg = get_config("llama3-8b").reduced()
+    rows = []
+    scenarios: Dict[str, Dict] = {}
+    for scenario in FLEET_SCENARIOS:
+        cell: Dict = {}
+        for mode in ("kevlarflow", "standard"):
+            m = _fleet_cell(cfg, mode, scenario, prof)
+            cell[mode] = m
+            rows.append(fmt_row(
+                "fleet", scenario, mode, m["n"], m["dropped"],
+                round(m["latency_avg"], 2), round(m["latency_p99"], 2),
+                round(m["ttft_avg"], 2), m["mttr_avg"], m["kills"],
+                m["resumed"], m["restarted"], m["epoch_final"]))
+        cell["latency_ratio_x"] = round(
+            cell["standard"]["latency_avg"] /
+            max(cell["kevlarflow"]["latency_avg"], 1e-9), 2)
+        scenarios[scenario] = cell
+    section = {"profile": profile, "n_instances": prof["n_instances"],
+               "arch": "llama3-8b", "placement": "rendezvous",
+               "clock": "ticks", "scenarios": scenarios}
+    path = os.path.abspath(BENCH_JSON)
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["scenario_matrix"] = section
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(rows, FLEET_HEADER)
+    print(f"wrote {path} (scenario_matrix section)")
+    return rows
 
 
 def main(fast: bool = True):
@@ -51,4 +191,16 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the fleet scenario matrix on the real engine "
+                         "(8-12 instances x 3 failure scenarios x 2 modes) "
+                         "and merge it into BENCH_latency.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke profile (fleet: 8 instances; sim: "
+                         "reduced rps grid)")
+    args = ap.parse_args()
+    if args.fleet:
+        main_fleet(fast=args.tiny)
+    else:
+        main(fast=args.tiny)

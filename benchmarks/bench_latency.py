@@ -298,8 +298,9 @@ def main(fast: bool = True, profile: str = None, families=None):
             prior = json.load(f)
         if len(families) < len(FAMILIES):
             payload["families"] = prior.get("families", {})
-        if "disagg" in prior:
-            payload["disagg"] = prior["disagg"]
+        for section in ("disagg", "scenario_matrix"):
+            if section in prior:
+                payload[section] = prior[section]
     for family in families:
         per = {"arch": FAMILIES[family]}
         for mode in ("kevlarflow", "standard"):

@@ -12,7 +12,13 @@ from __future__ import annotations
 from typing import List
 
 from repro.core.cluster import InstanceState, LoadBalancerGroup, PipelineInstance
+from repro.serving.controlplane import LeastLoadedRouting
 from repro.serving.request import Request
+
+
+def _sim_load(inst) -> int:
+    """The sim's load metric: queue depth + running requests."""
+    return len(inst.waiting) + len(inst.running)
 
 
 class LoadBalancer:
@@ -21,6 +27,9 @@ class LoadBalancer:
         assert policy in ("least_loaded", "round_robin"), policy
         self.group = group
         self.policy = policy
+        # the SAME least-loaded implementation RealEngine routes with —
+        # shared via the control plane so sim and real path cannot drift
+        self._least_loaded = LeastLoadedRouting()
         self._rr = 0
 
     def submit(self, req: Request):
@@ -33,9 +42,7 @@ class LoadBalancer:
             targets = [i for i in self.group.instances
                        if i.state == InstanceState.RECOVERING] or self.group.instances
         if self.policy == "least_loaded":
-            inst = min(targets,
-                       key=lambda i: (len(i.waiting) + len(i.running),
-                                      i.instance_id))
+            inst = self._least_loaded.pick(targets, _sim_load)
         else:
             inst = targets[self._rr % len(targets)]
             self._rr += 1

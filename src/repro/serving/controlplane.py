@@ -1,0 +1,326 @@
+"""Fleet control plane: membership, placement, routing, and recovery
+policy — the *decision* half of the serving engine, split out of the data
+plane (``engine.RealEngine``).
+
+The data plane moves bytes: it admits prompts, runs decode steps, stages
+block copies, promotes replicas. Every *choice* it makes — who replicates
+to whom, where a request routes, which spare rejoins when several
+instances are down — is delegated here, so fleet-scale policies (8-16
+instances, correlated failures, rejoin storms) evolve without touching the
+byte-moving code, and the sim (``core/router.py``) shares the exact same
+routing implementation instead of duplicating it.
+
+Pieces:
+
+* ``ClusterView`` — the membership truth: which instance ids are alive,
+  and a monotone ``epoch`` that bumps on every membership change
+  (fail or rejoin). Consumers that cache topology-derived state compare
+  epochs instead of re-deriving the alive-set.
+* ``PlacementPolicy`` — replication targeting. ``SuccessorPlacement`` is
+  the classic ring (next-alive successor — the engine's historical
+  behaviour, bit-for-bit). ``RendezvousPlacement`` is highest-random-
+  weight hashing: each (source → candidate) pair gets a deterministic
+  weight and the alive candidate with the highest weight wins, so a
+  membership change re-targets ONLY the pairs whose winner left (or that
+  the joiner now wins) — minimal re-hosting churn at fleet scale, where
+  successor placement cascades re-targets through the ring.
+* ``RoutingPolicy`` — request admission. ``LeastLoadedRouting`` is the
+  one implementation both the real engine and the sim LB call: pick the
+  candidate with the smallest (load, instance_id) key.
+* ``RecoveryPlanner`` — coordinated multi-failure recovery: records every
+  failure, orders rejoins (earliest failure first — the longest-degraded
+  capacity returns first), serializes them one per engine step so each
+  re-form settles (replicas re-host against the new topology) before the
+  next membership change, and survives failure storms — a spare killed
+  again right after (or while) rejoining is simply rescheduled.
+
+``ControlPlane`` bundles the four; ``RealEngine`` owns one and
+``server.py``'s ``/health`` serves ``describe()`` as the topology block.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence
+
+PLACEMENTS = ("successor", "rendezvous")
+
+
+class ClusterView:
+    """Membership + epoch for one LB group.
+
+    The view is the single source of truth for "who is alive" at the
+    policy layer: the engine marks failures/rejoins here in the same
+    breath it flips ``RealInstance.alive``, and the transport checks the
+    view at flush time, so a staged copy toward an instance that died (or
+    was replaced by a fresh pool) between stage and flush is dropped, not
+    scribbled."""
+
+    def __init__(self, n_instances: int, roles: Optional[Dict] = None):
+        self.n = n_instances
+        self._alive = set(range(n_instances))
+        self.epoch = 0
+        # disaggregation roles (informational; routing filters on them at
+        # the engine layer where the instance objects live)
+        self.roles = dict(roles) if roles else {}
+
+    def is_alive(self, instance_id: int) -> bool:
+        return instance_id in self._alive
+
+    def alive_ids(self) -> List[int]:
+        return sorted(self._alive)
+
+    def n_alive(self) -> int:
+        return len(self._alive)
+
+    def mark_failed(self, instance_id: int) -> bool:
+        """Record a death. Returns True (and bumps the epoch) iff the
+        instance was alive — marking a dead instance dead is a no-op, so
+        retried kills never inflate the epoch."""
+        if instance_id not in self._alive:
+            return False
+        self._alive.discard(instance_id)
+        self.epoch += 1
+        return True
+
+    def mark_alive(self, instance_id: int) -> bool:
+        if instance_id in self._alive:
+            return False
+        self._alive.add(instance_id)
+        self.epoch += 1
+        return True
+
+    def snapshot(self) -> dict:
+        return {"epoch": self.epoch, "n_instances": self.n,
+                "alive": self.alive_ids(),
+                "roles": {str(k): v for k, v in self.roles.items()}}
+
+
+class PlacementPolicy:
+    """Replication targeting: where does instance ``i``'s failover state
+    live? Implementations must be pure functions of (instance_id, view) —
+    deterministic across processes, no hidden state — so every consumer
+    (replication pass, failover, the /health topology block, property
+    tests) derives the identical ring."""
+
+    name = "base"
+
+    def target(self, instance_id: int, view: ClusterView) -> int:
+        """The replication target for ``instance_id`` under the current
+        alive-set, or -1 when no valid target exists (fewer than two
+        alive instances). Never returns ``instance_id`` itself and always
+        returns an alive instance."""
+        raise NotImplementedError
+
+    def targets(self, view: ClusterView) -> Dict[int, int]:
+        """The whole ring at once: alive instance -> its target."""
+        return {i: self.target(i, view) for i in view.alive_ids()}
+
+
+class SuccessorPlacement(PlacementPolicy):
+    """The classic ring: the next alive instance id (mod n). Exactly the
+    engine's historical ``_ring_target`` — kept as the default so existing
+    deployments and byte-identity drills see zero behaviour change."""
+
+    name = "successor"
+
+    def target(self, instance_id: int, view: ClusterView) -> int:
+        if view.n_alive() < 2:
+            return -1
+        idx = (instance_id + 1) % view.n
+        while not view.is_alive(idx):
+            idx = (idx + 1) % view.n
+        return idx
+
+
+class RendezvousPlacement(PlacementPolicy):
+    """Highest-random-weight (rendezvous) placement.
+
+    Each (source, candidate) pair hashes to a deterministic 64-bit weight;
+    the alive candidate (excluding the source) with the highest weight
+    hosts the source's replicas. The churn property successor placement
+    lacks: when an instance dies, the ONLY sources that re-target are the
+    ones whose winner died; when a spare rejoins, a source re-targets iff
+    the joiner out-weighs its current winner (~1/n_alive of the fleet in
+    expectation) — so an 8-16 instance fleet re-hosts a bounded slice of
+    its replica bytes per membership change instead of cascading."""
+
+    name = "rendezvous"
+
+    @staticmethod
+    def _weight(src: int, cand: int) -> int:
+        digest = hashlib.blake2b(b"%d->%d" % (src, cand),
+                                 digest_size=8).digest()
+        return int.from_bytes(digest, "big")
+
+    def target(self, instance_id: int, view: ClusterView) -> int:
+        if view.n_alive() < 2:
+            return -1
+        best, best_w = -1, -1
+        for cand in view.alive_ids():
+            if cand == instance_id:
+                continue
+            w = self._weight(instance_id, cand)
+            if w > best_w:
+                best, best_w = cand, w
+        return best
+
+
+def make_placement(name: str) -> PlacementPolicy:
+    if name == "successor":
+        return SuccessorPlacement()
+    if name == "rendezvous":
+        return RendezvousPlacement()
+    raise ValueError(f"unknown placement policy {name!r} "
+                     f"(choose from {PLACEMENTS})")
+
+
+class LeastLoadedRouting:
+    """THE least-loaded admission policy — the single implementation the
+    real engine's ``_route``/overflow pass AND the sim LB
+    (``core/router.py``) call, so the two paths can never drift. Load is
+    caller-defined (the engine counts active slots + queued depth; the
+    sim counts waiting + running); ties break on instance id, which keeps
+    placement deterministic for identical loads."""
+
+    name = "least_loaded"
+
+    def pick(self, candidates: Sequence, load: Callable[[object], int]):
+        """The admission target: smallest (load, instance_id)."""
+        return min(candidates, key=lambda c: (load(c), c.instance_id))
+
+    def order(self, candidates: Sequence, load: Callable[[object], int]):
+        """Candidates from least to most loaded (peer-overflow order)."""
+        return sorted(candidates, key=lambda c: (load(c), c.instance_id))
+
+
+class RecoveryPlanner:
+    """Coordinated recovery when one — or several — instances are down.
+
+    The planner owns the rejoin schedule the engine used to keep inline:
+
+    * ``on_failure`` records the death (and, with auto-rejoin, schedules
+      the spare: failure time + delay);
+    * ``next_due`` hands the engine AT MOST ONE due spare per step,
+      ordered by failure time (earliest first — the capacity that has
+      been missing longest returns first), ties by instance id.
+      Serializing rejoins is deliberate: every rejoin bumps the epoch and
+      re-targets part of the ring, and re-forming against a settled
+      topology costs one re-host pass — re-forming against a topology
+      that changes again next tick costs one per change;
+    * storms are idempotent: a kill of an instance whose rejoin is still
+      pending keeps the earlier failure time (its capacity has been gone
+      since then) but pushes the ready time out; a spare killed right
+      after rejoining is simply scheduled again.
+
+    The planner never touches instances or pools — it answers "who, when,
+    in what order"; the engine executes."""
+
+    def __init__(self, view: ClusterView):
+        self.view = view
+        # instance_id -> {"fail_time", "ready_at"} for spares not yet back
+        self._pending: Dict[int, Dict[str, float]] = {}
+        self.rejoins_planned = 0
+        self.rejoins_completed = 0
+
+    def on_failure(self, instance_id: int, t_fail: float,
+                   rejoin_at: Optional[float] = None):
+        """Record a failure; ``rejoin_at`` schedules the spare (None =
+        manual recovery — an admin rejoin clears the record)."""
+        prior = self._pending.get(instance_id)
+        fail_time = min(prior["fail_time"], t_fail) if prior else t_fail
+        if rejoin_at is None and prior is None:
+            self._pending[instance_id] = {"fail_time": fail_time,
+                                          "ready_at": float("inf")}
+            return
+        ready = rejoin_at if rejoin_at is not None else prior["ready_at"]
+        self._pending[instance_id] = {"fail_time": fail_time,
+                                      "ready_at": ready}
+        if prior is None or rejoin_at is not None:
+            self.rejoins_planned += 1
+
+    def cancel(self, instance_id: int):
+        self._pending.pop(instance_id, None)
+
+    def next_due(self, t: float) -> Optional[int]:
+        """The one spare to rejoin this step (or None). Stale records —
+        an instance an admin already rejoined by hand — are dropped, not
+        returned, so a manual rejoin never collides with the schedule."""
+        due = []
+        for iid, rec in list(self._pending.items()):
+            if self.view.is_alive(iid):
+                self._pending.pop(iid)       # manually recovered
+                continue
+            if t >= rec["ready_at"]:
+                due.append((rec["fail_time"], iid))
+        if not due:
+            return None
+        return min(due)[1]
+
+    def on_rejoined(self, instance_id: int, t: float):
+        if self._pending.pop(instance_id, None) is not None:
+            self.rejoins_completed += 1
+
+    def _ordered(self) -> List[tuple]:
+        return sorted(self._pending.items(),
+                      key=lambda kv: (kv[1]["fail_time"], kv[0]))
+
+    def pending_rejoins(self) -> List[tuple]:
+        """(instance_id, ready_at) pairs for SCHEDULED spares, rejoin
+        order (legacy shape). Manual-recovery records (no rejoin time)
+        are excluded: they resolve only when an admin acts, so they must
+        not hold ``recovery_pending()`` — and with it drain loops — open
+        forever."""
+        return [(iid, rec["ready_at"]) for iid, rec in self._ordered()
+                if rec["ready_at"] != float("inf")]
+
+    def has_pending(self) -> bool:
+        """True iff a *scheduled* rejoin is outstanding."""
+        return any(rec["ready_at"] != float("inf")
+                   for rec in self._pending.values())
+
+    def plan(self, placement: PlacementPolicy) -> List[dict]:
+        """The recovery plan as data — for /health and the runbook: each
+        down instance (scheduled or awaiting manual recovery), its rejoin
+        order, when it becomes due, and the ring target it will replicate
+        to once back (a what-if against the view with the spare marked
+        alive)."""
+        out = []
+        for order, (iid, rec) in enumerate(self._ordered()):
+            ready = rec["ready_at"]
+            whatif = ClusterView(self.view.n)
+            whatif._alive = set(self.view._alive) | {iid}
+            tgt = placement.target(iid, whatif)
+            out.append({"instance": iid, "order": order,
+                        "ready_at": ready if ready != float("inf") else -1.0,
+                        "fail_time": rec["fail_time"],
+                        "ring_target_on_rejoin": tgt})
+        return out
+
+    def state(self) -> dict:
+        return {"pending": len(self._pending),
+                "rejoins_planned": self.rejoins_planned,
+                "rejoins_completed": self.rejoins_completed}
+
+
+class ControlPlane:
+    """The bundle the engine owns: one view + one policy of each kind."""
+
+    def __init__(self, n_instances: int, placement: str = "successor",
+                 roles: Optional[Dict] = None):
+        self.view = ClusterView(n_instances, roles=roles)
+        self.placement = make_placement(placement)
+        self.routing = LeastLoadedRouting()
+        self.planner = RecoveryPlanner(self.view)
+
+    def describe(self) -> dict:
+        """The /health topology block: membership + epoch + the live
+        replication ring + the recovery plan."""
+        return {
+            **self.view.snapshot(),
+            "placement": self.placement.name,
+            "routing": self.routing.name,
+            "ring": {str(i): t
+                     for i, t in self.placement.targets(self.view).items()},
+            "planner": {**self.planner.state(),
+                        "plan": self.planner.plan(self.placement)},
+        }

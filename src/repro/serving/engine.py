@@ -65,6 +65,7 @@ import numpy as np
 from repro.models import api
 from repro.models import paged_decode as PD
 from repro.models.hybrid import state_blob_words
+from repro.serving.controlplane import ControlPlane
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import sample
@@ -124,6 +125,13 @@ class EngineConfig:
     # Roles are soft: if every prefill-role instance is dead, survivors
     # serve colocated; a decode-side kill re-streams to another target.
     disaggregate: bool = False
+    # replication placement policy (controlplane.PlacementPolicy):
+    # "successor" = classic ring, next-alive instance id (the historical
+    # behaviour, bit-for-bit); "rendezvous" = highest-random-weight
+    # hashing — a membership change re-targets only the instances whose
+    # winner left (or that the joiner now wins), so fleet-scale failures
+    # re-host a bounded slice of replica bytes instead of cascading
+    placement: str = "successor"
     # recovery policy applied by fail_instance. "kevlarflow": in-flight
     # requests resume from promoted replicas, the dead instance's queue
     # reroutes to survivors, and a warm spare rejoins after rejoin_delay
@@ -883,6 +891,13 @@ class RealEngine:
                           for i in range(n_instances)}
         else:
             self.roles = {i: "both" for i in range(n_instances)}
+        # the control plane: membership/epoch (ClusterView), replication
+        # placement, least-loaded routing (shared with the sim LB), and
+        # the multi-failure recovery planner. Every policy decision the
+        # data-plane code below makes is delegated here.
+        self.control = ControlPlane(n_instances,
+                                    placement=self.ecfg.placement,
+                                    roles=self.roles)
         self.instances = [
             RealInstance(cfg, self.params, self.ecfg, i,
                          executor=self.executor, clock=clock,
@@ -896,7 +911,8 @@ class RealEngine:
         # Copy jobs staged at the end of step N ship at the top of step
         # N+1 (or at the fail/rejoin barrier); byte totals are accounted
         # at FLUSH time so a job dropped for a dead target never counts
-        self.transport = TransportChannel(self.instances)
+        self.transport = TransportChannel(self.instances,
+                                          view=self.control.view)
         # rid -> in-flight handoff record (disaggregation): which prefill
         # instance is streaming it, the decode target, and whether the
         # final chunk's pages have landed (seat condition)
@@ -915,8 +931,6 @@ class RealEngine:
         # standard-recovery stall: until this time the WHOLE group is down
         # reloading weights (the classic fault path KevlarFlow removes)
         self.stall_until = -1.0
-        # (instance_id, ready_at) warm spares waiting to rejoin
-        self._pending_rejoins: List[tuple] = []
         # one dict per fail_instance call; "mttr" lands at rejoin time
         self.failure_events: List[dict] = []
         self.repl_steps = 0
@@ -1007,7 +1021,7 @@ class RealEngine:
             # rejoin re-routes it
             self.waiting.insert(0, req) if front else self.waiting.append(req)
             return
-        tgt = min(alive, key=lambda i: (self._load(i), i.instance_id))
+        tgt = self.control.routing.pick(alive, self._load)
         req.instance_id = tgt.instance_id
         q = self.queues[tgt.instance_id]
         q.insert(0, req) if front else q.append(req)
@@ -1029,16 +1043,19 @@ class RealEngine:
         """True while a spare is waiting to rejoin or the group is inside a
         standard-mode reload stall — step() must keep running through idle
         periods so recovery completes without traffic."""
-        return bool(self._pending_rejoins) or self.t < self.stall_until
+        return self.control.planner.has_pending() or self.t < self.stall_until
+
+    @property
+    def _pending_rejoins(self) -> List[tuple]:
+        """(instance_id, ready_at) spares scheduled to rejoin — a read
+        view over the recovery planner (the legacy attribute's shape)."""
+        return self.control.planner.pending_rejoins()
 
     def _ring_target(self, instance_id: int) -> int:
-        alive = [i.instance_id for i in self.instances if i.alive]
-        if len(alive) < 2:
-            return -1
-        idx = (instance_id + 1) % len(self.instances)
-        while not self.instances[idx].alive:
-            idx = (idx + 1) % len(self.instances)
-        return idx
+        """Replication target under the control plane's placement policy
+        (successor ring by default; rendezvous-hash with
+        ``EngineConfig.placement="rendezvous"``)."""
+        return self.control.placement.target(instance_id, self.control.view)
 
     def step(self) -> int:
         """One engine iteration: rejoin due spares, route + admit, decode
@@ -1055,12 +1072,13 @@ class RealEngine:
         self.flush_replication()
         if self._handoffs:
             self._complete_handoffs()
-        for iid, ready in list(self._pending_rejoins):
-            if self.t >= ready:
-                if self.instances[iid].alive:   # e.g. manual admin rejoin
-                    self._pending_rejoins.remove((iid, ready))
-                else:
-                    self.rejoin_instance(iid)
+        # coordinated recovery: the planner hands back AT MOST ONE due
+        # spare per step (earliest failure first) — serialized rejoins let
+        # each re-form settle against a stable topology before the next
+        # membership change re-targets the ring again
+        due = self.control.planner.next_due(self.t)
+        if due is not None:
+            self.rejoin_instance(due)
         if self.t < self.stall_until:
             return 0       # standard recovery: group-wide weight reload
         alive = [i for i in self.instances if i.alive]
@@ -1083,7 +1101,7 @@ class RealEngine:
             q = self.queues[inst.instance_id]
             if not q:
                 continue
-            for other in sorted(overflow, key=self._load):
+            for other in self.control.routing.order(overflow, self._load):
                 if other is inst:
                     continue
                 while q and other.free_slots() and other.admit(q[0], self.t):
@@ -1563,6 +1581,9 @@ class RealEngine:
         drained = self.queues[instance_id]
         self.queues[instance_id] = []
         inst.fail()
+        # membership change: the view's epoch bump is what downstream
+        # consumers (transport flush, placement, /health topology) key on
+        self.control.view.mark_failed(instance_id)
         event = {"instance": instance_id, "mode": self.ecfg.recovery,
                  "t_fail": self.t, "n_victims": len(victims),
                  "requeued": len(drained), "resumed": 0, "restarted": 0,
@@ -1572,6 +1593,7 @@ class RealEngine:
         if self._handoffs:
             victims = self._handoffs_on_fail(instance_id, victims, resumed,
                                              event, standard)
+        restarted: List[Request] = []
         for req in victims:
             meta = self.replica_meta.pop(req.rid, None)
             target = None
@@ -1587,7 +1609,15 @@ class RealEngine:
                 req.restart()
                 req.state = RequestState.QUEUED
                 event["restarted"] += 1
-                self._route(req, front=True)
+                restarted.append(req)
+        # restarted victims requeue ahead of everything else, in their
+        # ORIGINAL order: reversed front-insertion keeps request i ahead
+        # of request j (i admitted first) whether they land on a survivor
+        # queue or — when this was the last alive instance — in the
+        # arrival buffer, where per-request front-inserts used to reverse
+        # them
+        for req in reversed(restarted):
+            self._route(req, front=True)
         # the dead instance's queued (never-admitted) work reroutes to the
         # survivors behind the restarted victims, ahead of future arrivals
         for req in drained:
@@ -1618,7 +1648,12 @@ class RealEngine:
         if self.ecfg.auto_rejoin:
             delay = self.ecfg.reload_penalty if standard \
                 else self.ecfg.rejoin_delay
-            self._pending_rejoins.append((instance_id, self.t + delay))
+            self.control.planner.on_failure(instance_id, self.t,
+                                            rejoin_at=self.t + delay)
+        else:
+            # manual recovery: recorded (it shows in /health's plan) but
+            # never scheduled — an admin rejoin_instance clears it
+            self.control.planner.on_failure(instance_id, self.t)
         return resumed
 
     def rejoin_instance(self, instance_id: int) -> RealInstance:
@@ -1635,13 +1670,16 @@ class RealEngine:
         # barrier before the instance object (and its pool) is replaced —
         # staged copies must never resolve against the fresh pool's slots
         self.flush_replication()
-        self._pending_rejoins = [(i, t) for i, t in self._pending_rejoins
-                                 if i != instance_id]
+        self.control.planner.on_rejoined(instance_id, self.t)
         inst = RealInstance(self.cfg, self.params, self.ecfg, instance_id,
                             executor=self.executor, clock=self.clock,
                             role=self.roles[instance_id])
         self.instances[instance_id] = inst
         self.queues[instance_id] = []
+        # back in the membership AFTER the flush barrier: staged copies
+        # toward the dead incarnation were dropped, not seated in the
+        # fresh pool; the epoch bump re-targets the ring for survivors
+        self.control.view.mark_alive(instance_id)
         # fresh pool, no hosted keys (defensive: fail_instance pruned these)
         self._shared_hosted_keys = {
             (t, k) for (t, k) in self._shared_hosted_keys

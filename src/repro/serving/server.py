@@ -126,6 +126,10 @@ class EngineService:
                 "replication": eng.replication_stats(),
                 "prefix": eng.prefix_stats(),
                 "disagg": eng.disagg_stats(),
+                # the control plane's view of the fleet: membership epoch,
+                # placement ring, and the recovery plan — what an operator
+                # polls during a failure storm to see rejoin ordering
+                "topology": eng.control.describe(),
             }
 
     def shutdown(self):
@@ -240,6 +244,12 @@ def main():
                          "the instances run chunked prefill only and stream "
                          "finished KV pages to decode-role peers (implies "
                          "--prefill-chunk; defaults it to 8 if unset)")
+    ap.add_argument("--placement", default="successor",
+                    choices=["successor", "rendezvous"],
+                    help="replication placement policy: next-alive ring "
+                         "successor (classic), or rendezvous hashing "
+                         "(minimal re-host churn on membership changes — "
+                         "preferred at 8+ instances)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="intern fully-covered prompt pages in a refcounted "
                          "prefix index; shared prefixes attach by reference "
@@ -260,6 +270,7 @@ def main():
                         prefill_chunk=args.prefill_chunk,
                         prefix_cache=args.prefix_cache,
                         disaggregate=args.disaggregate,
+                        placement=args.placement,
                         replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "

@@ -92,10 +92,17 @@ class TransportChannel:
     replaces an instance object is visible to the next flush, and a dead
     target is skipped — its hosted slots died with its pool, so shipping
     would scribble on a future pool's blocks.
+
+    Target liveness resolves through the control plane's ``ClusterView``
+    when one is supplied (``view.is_alive`` — the membership truth the
+    engine updates in the same breath it fails/replaces an instance);
+    without a view it falls back to the instance objects' own flags, so
+    the channel still works standalone in tests.
     """
 
-    def __init__(self, instances: list):
+    def __init__(self, instances: list, view=None):
         self.instances = instances
+        self.view = view
         self.pending: List[dict] = []
         self.staged: Dict[str, Tally] = {k: Tally() for k in KINDS}
         self.shipped: Dict[str, Tally] = {k: Tally() for k in KINDS}
@@ -129,7 +136,9 @@ class TransportChannel:
         shipped = []
         for msg in pending:
             dst = self.instances[msg["dst"]]
-            if not dst.alive or msg["dst"] == exclude:
+            dst_alive = (self.view.is_alive(msg["dst"])
+                         if self.view is not None else dst.alive)
+            if not dst_alive or msg["dst"] == exclude:
                 self.dropped[msg["kind"]].add(msg)
                 continue
             src = self.instances[msg["src"]]

@@ -38,6 +38,23 @@ def _valid_disagg():
                                    "ttft_ratio_x": 0.8}}}
 
 
+def _fleet_cell(lat, resumed=5, dropped=0):
+    return {"n": 24, "n_submitted": 24, "dropped": dropped,
+            "latency_avg": lat, "latency_p99": 2 * lat, "ttft_avg": lat / 2,
+            "mttr_avg": 4.0, "kills": 1, "resumed": resumed,
+            "restarted": 1, "epoch_final": 2}
+
+
+def _valid_matrix():
+    scen = {s: {"kevlarflow": _fleet_cell(8.0),
+                "standard": _fleet_cell(30.0, resumed=0),
+                "latency_ratio_x": 3.75}
+            for s in ("single_kill", "correlated_kill_3",
+                      "storm_during_rejoin")}
+    return {"profile": "tiny", "n_instances": 8, "arch": "llama3-8b",
+            "placement": "rendezvous", "clock": "ticks", "scenarios": scen}
+
+
 def _valid_latency():
     fams = {}
     for fam in ("dense", "moe", "hybrid"):
@@ -49,7 +66,8 @@ def _valid_latency():
                      "standard": _mode(4.0, ttft_p99=1.6),
                      "ratios": {"mttr_x": 20.0, "goodput_tok_x": 1.3}}
     return {"meta": {"profile": "tiny"}, "families": fams,
-            "disagg": _valid_disagg()}
+            "disagg": _valid_disagg(),
+            "scenario_matrix": _valid_matrix()}
 
 
 def _check(tmp_path, payload):
@@ -172,6 +190,47 @@ def test_disagg_must_actually_stream_flagged(tmp_path):
     payload["disagg"]["families"]["dense"]["disagg"]["roles"] = {
         "0": "prefill", "1": "prefill"}
     assert any("roles" in p for p in _check(tmp_path, payload))
+
+
+def test_missing_scenario_matrix_flagged(tmp_path):
+    payload = _valid_latency()
+    del payload["scenario_matrix"]
+    assert any("scenario_matrix section missing" in p
+               for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    del payload["scenario_matrix"]["scenarios"]["storm_during_rejoin"]
+    assert any("storm_during_rejoin" in p for p in _check(tmp_path, payload))
+
+
+def test_scenario_matrix_fleet_size_gated(tmp_path):
+    """The matrix must cover a real fleet — 2-instance runs don't count."""
+    payload = _valid_latency()
+    payload["scenario_matrix"]["n_instances"] = 2
+    assert any("not a fleet" in p for p in _check(tmp_path, payload))
+
+
+def test_scenario_matrix_dropped_requests_gated(tmp_path):
+    """ISSUE 9 bar: no cell may lose a request through its failures."""
+    payload = _valid_latency()
+    payload["scenario_matrix"]["scenarios"]["correlated_kill_3"][
+        "standard"]["dropped"] = 2
+    problems = _check(tmp_path, payload)
+    assert any("dropped" in p and "correlated_kill_3" in p
+               for p in problems)
+
+
+def test_scenario_matrix_ordering_gated(tmp_path):
+    """Kevlarflow must strictly beat standard on avg latency per scenario,
+    and its cells must show at least one seamless replica promotion."""
+    payload = _valid_latency()
+    payload["scenario_matrix"]["scenarios"]["single_kill"]["kevlarflow"][
+        "latency_avg"] = 30.0                      # tie with standard
+    assert any("not strictly better" in p and "single_kill" in p
+               for p in _check(tmp_path, payload))
+    payload = _valid_latency()
+    payload["scenario_matrix"]["scenarios"]["single_kill"]["kevlarflow"][
+        "resumed"] = 0
+    assert any("replica promotion" in p for p in _check(tmp_path, payload))
 
 
 def _valid_prefix():

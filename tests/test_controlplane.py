@@ -1,0 +1,364 @@
+"""Control-plane invariants (controlplane.py): membership epochs,
+placement properties, shared routing, and the multi-failure recovery
+planner.
+
+Placement is property-swept in the PoolActions style: a numpy-RNG sweep
+over arbitrary alive-sets that runs everywhere (tier-1), and a hypothesis
+stateful machine (gated by the usual ``importorskip`` pattern) that
+shrinks membership-change sequences to minimal counterexamples.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # the numpy sweep still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.controlplane import (
+    ClusterView, ControlPlane, LeastLoadedRouting, RecoveryPlanner,
+    RendezvousPlacement, SuccessorPlacement, make_placement)
+
+
+# -- ClusterView ------------------------------------------------------------
+
+def test_view_epoch_bumps_once_per_membership_change():
+    view = ClusterView(4)
+    assert view.epoch == 0 and view.n_alive() == 4
+    assert view.mark_failed(2)
+    assert view.epoch == 1 and view.alive_ids() == [0, 1, 3]
+    # retried kill of a dead instance: no-op, no epoch inflation
+    assert not view.mark_failed(2)
+    assert view.epoch == 1
+    assert view.mark_alive(2)
+    assert view.epoch == 2 and view.n_alive() == 4
+    assert not view.mark_alive(2)
+    assert view.epoch == 2
+
+
+def test_view_snapshot_shape():
+    view = ClusterView(3, roles={0: "prefill", 1: "decode", 2: "decode"})
+    view.mark_failed(1)
+    snap = view.snapshot()
+    assert snap == {"epoch": 1, "n_instances": 3, "alive": [0, 2],
+                    "roles": {"0": "prefill", "1": "decode", "2": "decode"}}
+
+
+# -- placement --------------------------------------------------------------
+
+def _successor_reference(instance_id, n, alive):
+    """The engine's historical ``_ring_target`` scan, verbatim."""
+    if len(alive) < 2:
+        return -1
+    idx = (instance_id + 1) % n
+    while idx not in alive:
+        idx = (idx + 1) % n
+    return idx
+
+
+def test_successor_matches_historical_ring():
+    pol = SuccessorPlacement()
+    view = ClusterView(5)
+    for dead in ([], [1], [1, 2], [0, 2, 4]):
+        view._alive = set(range(5)) - set(dead)
+        for i in view.alive_ids():
+            assert pol.target(i, view) == \
+                _successor_reference(i, 5, view._alive)
+
+
+def test_placement_degenerate_fleet():
+    view = ClusterView(3)
+    view._alive = {1}
+    for name in ("successor", "rendezvous"):
+        assert make_placement(name).target(1, view) == -1
+
+
+def test_make_placement_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_placement("modulo")
+
+
+def test_rendezvous_minimal_churn_on_failure():
+    """The property that justifies rendezvous at fleet scale: killing one
+    instance re-targets ONLY the sources that replicated to it; everyone
+    else keeps their target. (Successor placement shifts every source
+    whose scan crossed the victim.)"""
+    pol = RendezvousPlacement()
+    view = ClusterView(12)
+    before = pol.targets(view)
+    victim = 7
+    view.mark_failed(victim)
+    after = pol.targets(view)
+    for i, tgt in after.items():
+        if before[i] == victim:
+            assert tgt != victim
+        else:
+            assert tgt == before[i], \
+                f"source {i} re-targeted without losing its winner"
+
+
+def test_rendezvous_bounded_churn_on_rejoin():
+    """A joiner steals a source iff it out-weighs the incumbent — in
+    expectation ~1/n_alive of the fleet, and NEVER everyone. Successor
+    placement is the contrast: the joiner captures every source whose
+    scan previously crossed its slot."""
+    pol = RendezvousPlacement()
+    view = ClusterView(12)
+    view.mark_failed(7)
+    before = pol.targets(view)
+    view.mark_alive(7)
+    after = pol.targets(view)
+    moved = [i for i in before if after[i] != before[i]]
+    assert all(after[i] == 7 for i in moved), \
+        "a rejoin re-targeted a source to someone other than the joiner"
+    assert len(moved) < view.n_alive() - 1, \
+        "rejoin churned the whole fleet"
+
+
+def _sweep_alive_sets(n_sets, seed):
+    """Tier-1 property sweep: arbitrary (n, alive-set) fleets, both
+    policies. No self-placement, targets always alive, deterministic
+    across fresh policy objects, successor == the historical scan."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_sets):
+        n = int(rng.integers(2, 17))
+        n_alive = int(rng.integers(1, n + 1))
+        alive = set(int(i) for i in
+                    rng.choice(n, size=n_alive, replace=False))
+        view = ClusterView(n)
+        view._alive = set(alive)
+        view.epoch = int(rng.integers(0, 50))
+        for name in ("successor", "rendezvous"):
+            pol, pol2 = make_placement(name), make_placement(name)
+            for i in sorted(alive):
+                tgt = pol.target(i, view)
+                assert tgt == pol2.target(i, view), "non-deterministic"
+                if len(alive) < 2:
+                    assert tgt == -1
+                    continue
+                assert tgt != i, "self-placement"
+                assert tgt in alive, "target not alive"
+                if name == "successor":
+                    assert tgt == _successor_reference(i, n, alive)
+
+
+def test_placement_property_sweep():
+    _sweep_alive_sets(n_sets=200, seed=0)
+
+
+@pytest.mark.slow
+def test_placement_property_sweep_deep():
+    _sweep_alive_sets(n_sets=1000, seed=1)
+
+
+# -- shared least-loaded routing (satellite: sim/engine dedup) --------------
+
+class _FakeInst:
+    def __init__(self, iid, load):
+        self.instance_id = iid
+        self._load = load
+
+
+def test_least_loaded_pick_matches_inline_formula():
+    """The shared policy must behave byte-identically to the min() both
+    the engine and the sim used to inline: smallest load, ties by id."""
+    rng = np.random.default_rng(2)
+    pol = LeastLoadedRouting()
+    for _ in range(200):
+        insts = [_FakeInst(i, int(rng.integers(0, 4)))
+                 for i in range(int(rng.integers(1, 9)))]
+        load = lambda c: c._load
+        want = min(insts, key=lambda c: (c._load, c.instance_id))
+        assert pol.pick(insts, load) is want
+        assert pol.order(insts, load) == \
+            sorted(insts, key=lambda c: (c._load, c.instance_id))
+
+
+def test_sim_lb_uses_shared_policy():
+    """core/router.py must route through the ONE shared implementation —
+    the duplicated min() is gone."""
+    from repro.core.router import LoadBalancer
+    import inspect
+
+    src = inspect.getsource(LoadBalancer.submit)
+    assert "_least_loaded.pick" in src
+    assert "min(" not in src, "sim LB still inlines its own least-loaded"
+
+
+# -- RecoveryPlanner --------------------------------------------------------
+
+def test_planner_orders_rejoins_earliest_failure_first():
+    view = ClusterView(6)
+    planner = RecoveryPlanner(view)
+    for iid, t in ((3, 2.0), (1, 1.0), (5, 1.0)):
+        view.mark_failed(iid)
+        planner.on_failure(iid, t, rejoin_at=t + 1.0)
+    # all due at t=10: earliest failure wins, ties by id — and ONE per call
+    order = []
+    while True:
+        due = planner.next_due(10.0)
+        if due is None:
+            break
+        order.append(due)
+        planner.on_rejoined(due, 10.0)
+        view.mark_alive(due)
+    assert order == [1, 5, 3]
+    assert planner.rejoins_completed == 3
+    assert not planner.has_pending()
+
+
+def test_planner_respects_ready_time():
+    view = ClusterView(4)
+    planner = RecoveryPlanner(view)
+    view.mark_failed(2)
+    planner.on_failure(2, 1.0, rejoin_at=5.0)
+    assert planner.next_due(4.9) is None
+    assert planner.has_pending()
+    assert planner.next_due(5.0) == 2
+
+
+def test_planner_manual_failures_never_hold_recovery_open():
+    """A failure without a scheduled rejoin (auto_rejoin off) must not
+    keep has_pending() — and with it the engine's drain loops — true
+    forever; it still shows in the plan for operators."""
+    view = ClusterView(4)
+    planner = RecoveryPlanner(view)
+    view.mark_failed(1)
+    planner.on_failure(1, 2.0)
+    assert not planner.has_pending()
+    assert planner.pending_rejoins() == []
+    assert planner.next_due(1e9) is None
+    plan = planner.plan(SuccessorPlacement())
+    assert [p["instance"] for p in plan] == [1]
+    assert plan[0]["ready_at"] == -1.0        # manual: no scheduled time
+
+
+def test_planner_storm_rekill_keeps_earliest_fail_time():
+    """A second kill while the rejoin is still pending keeps the ORIGINAL
+    failure time (capacity has been gone since then) but pushes the ready
+    time out — and the record stays single, not duplicated."""
+    view = ClusterView(4)
+    planner = RecoveryPlanner(view)
+    view.mark_failed(0)
+    planner.on_failure(0, 1.0, rejoin_at=3.0)
+    planner.on_failure(0, 2.5, rejoin_at=6.0)
+    assert planner.pending_rejoins() == [(0, 6.0)]
+    plan = planner.plan(SuccessorPlacement())
+    assert plan[0]["fail_time"] == 1.0
+    assert planner.next_due(3.0) is None      # pushed out by the re-kill
+    assert planner.next_due(6.0) == 0
+
+
+def test_planner_drops_stale_records_on_manual_rejoin():
+    """An admin rejoining an instance by hand must not collide with the
+    schedule: next_due drops the record instead of returning it."""
+    view = ClusterView(4)
+    planner = RecoveryPlanner(view)
+    view.mark_failed(3)
+    planner.on_failure(3, 0.0, rejoin_at=2.0)
+    view.mark_alive(3)                        # manual recovery
+    assert planner.next_due(5.0) is None
+    assert not planner.has_pending()
+
+
+def test_planner_plan_targets_whatif_ring():
+    """The plan's ring target is computed as if the spare were already
+    back — the target it will replicate to on rejoin, not -1."""
+    view = ClusterView(3)
+    planner = RecoveryPlanner(view)
+    for iid in (0, 1, 2):
+        view.mark_failed(iid)
+        planner.on_failure(iid, float(iid), rejoin_at=10.0)
+    plan = planner.plan(SuccessorPlacement())
+    # even with EVERYTHING down, each what-if has exactly one alive
+    # instance (the spare itself) -> no valid target yet
+    assert all(p["ring_target_on_rejoin"] == -1 for p in plan)
+    view.mark_alive(0)
+    planner.on_rejoined(0, 10.0)
+    plan = planner.plan(SuccessorPlacement())
+    assert all(p["ring_target_on_rejoin"] == 0 for p in plan)
+
+
+# -- ControlPlane.describe (the /health topology block) ---------------------
+
+def test_describe_serves_topology():
+    cp = ControlPlane(4, placement="rendezvous")
+    cp.view.mark_failed(2)
+    cp.planner.on_failure(2, 1.0, rejoin_at=4.0)
+    d = cp.describe()
+    assert d["epoch"] == 1 and d["alive"] == [0, 1, 3]
+    assert d["placement"] == "rendezvous"
+    assert d["routing"] == "least_loaded"
+    assert set(d["ring"]) == {"0", "1", "3"}
+    assert all(int(t) in (0, 1, 3) for t in d["ring"].values())
+    assert d["planner"]["pending"] == 1
+    assert d["planner"]["plan"][0]["instance"] == 2
+
+
+# -- hypothesis stateful machine (shrinks membership sequences) -------------
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis installed")
+def test_membership_machine_needs_hypothesis():
+    """Visible skip marker: when hypothesis is missing, the
+    MembershipMachine suite below is not generated at all — this
+    placeholder makes the gap show up in the pytest summary (the numpy
+    sweep above covers the same invariants)."""
+    pytest.skip("hypothesis not installed: MembershipMachine property "
+                "tests did not run (see test_placement_property_sweep)")
+
+
+if HAVE_HYPOTHESIS:
+    class MembershipMachine(RuleBasedStateMachine):
+        """Random kill/rejoin sequences against a 10-instance view with a
+        planner riding along; placement invariants checked after every
+        membership change."""
+
+        def __init__(self):
+            super().__init__()
+            self.view = ClusterView(10)
+            self.planner = RecoveryPlanner(self.view)
+            self.policies = [SuccessorPlacement(), RendezvousPlacement()]
+            self.changes = 0
+            self.t = 0.0
+
+        @rule(iid=st.integers(0, 9), delay=st.floats(0.5, 5.0))
+        def kill(self, iid, delay):
+            self.t += 1.0
+            if self.view.mark_failed(iid):
+                self.changes += 1
+                self.planner.on_failure(iid, self.t,
+                                        rejoin_at=self.t + delay)
+
+        @rule()
+        def tick_rejoin(self):
+            self.t += 1.0
+            due = self.planner.next_due(self.t)
+            if due is not None:
+                self.planner.on_rejoined(due, self.t)
+                if self.view.mark_alive(due):
+                    self.changes += 1
+
+        @invariant()
+        def epoch_counts_changes(self):
+            assert self.view.epoch == self.changes
+
+        @invariant()
+        def placement_valid(self):
+            for pol in self.policies:
+                for i in self.view.alive_ids():
+                    tgt = pol.target(i, self.view)
+                    if self.view.n_alive() < 2:
+                        assert tgt == -1
+                    else:
+                        assert tgt != i and self.view.is_alive(tgt)
+
+        @invariant()
+        def pending_are_dead(self):
+            for iid, _ in self.planner.pending_rejoins():
+                assert not self.view.is_alive(iid)
+
+    MembershipMachine.TestCase.settings = settings(
+        max_examples=30, stateful_step_count=30, deadline=None)
+    TestMembershipMachine = MembershipMachine.TestCase

@@ -1,0 +1,97 @@
+"""Fleet-scale chaos drills (ISSUE 9 acceptance): a correlated
+3-instance kill followed by a spare-dies-while-rejoining storm, on a
+real 8-12 instance engine, must complete every request with output
+streams BYTE-IDENTICAL to a failure-free run of the same workload.
+
+The tier-1 drill runs the dense family on an 8-instance fleet; the
+``slow``-marked drill is the full acceptance bar — 12 instances, all
+three paged families.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, RealEngine
+from repro.serving.request import Request
+
+FAMILIES = {
+    "dense": "llama3-8b",
+    "moe": "mixtral-8x7b",
+    "hybrid": "recurrentgemma-9b",
+}
+
+
+def _workload(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = int(rng.integers(4, 14))
+        reqs.append(Request(
+            rid=rid, prompt_len=plen,
+            max_new_tokens=int(rng.integers(2, 7)), arrival_time=0.0,
+            prompt_tokens=rng.integers(1, cfg.vocab_size, plen).tolist()))
+    return reqs
+
+
+def _run_reference(cfg, ecfg_kwargs, n_instances, n_requests):
+    eng = RealEngine(cfg, EngineConfig(**ecfg_kwargs),
+                     n_instances=n_instances, seed=0)
+    for r in _workload(cfg, n_requests):
+        eng.submit(r)
+    eng.run(max_iters=2000)
+    assert len(eng.done) == n_requests
+    return {r.rid: r.output_tokens for r in eng.done}
+
+
+def _chaos_drill(arch: str, n_instances: int, n_requests: int):
+    """Correlated 3-instance kill at t=2, then the storm: the first spare
+    back is killed again the moment it rejoins. Auto-rejoin brings the
+    whole fleet home; every stream must match the failure-free run."""
+    cfg = get_config(arch).reduced()
+    ecfg_kwargs = dict(max_slots=4, max_seq=64, placement="rendezvous")
+    eng = RealEngine(cfg, EngineConfig(auto_rejoin=True, rejoin_delay=4.0,
+                                       **ecfg_kwargs),
+                     n_instances=n_instances, seed=0)
+    for r in _workload(cfg, n_requests):
+        eng.submit(r)
+    correlated_done = False
+    rekill_pending = True
+    steps = 0
+    while (eng.has_pending() or eng.recovery_pending()) and steps < 3000:
+        if not correlated_done and eng.t >= 2.0:
+            for iid in (0, 1, 2):
+                eng.fail_instance(iid)
+            correlated_done = True
+        if rekill_pending and correlated_done and \
+                eng.instances[0].alive and any(
+                    e["instance"] == 0 and e["t_rejoin"] >= 0
+                    for e in eng.failure_events):
+            eng.fail_instance(0)       # the spare dies mid-recovery
+            rekill_pending = False
+        eng.step()
+        steps += 1
+    assert correlated_done and not rekill_pending, "drill never fired"
+    assert len(eng.done) == n_requests, \
+        f"dropped {n_requests - len(eng.done)} request(s) in the storm"
+    # the fleet healed completely: 4 kills + 4 rejoins, epoch == 8
+    assert eng.control.view.n_alive() == n_instances
+    assert eng.control.view.epoch == 8
+    assert not eng.control.planner.has_pending()
+    assert len(eng.mttr_events()) == 4
+    # replication engaged: at least one victim resumed from its replica
+    assert sum(e["resumed"] for e in eng.failure_events) >= 1
+    got = {r.rid: r.output_tokens for r in eng.done}
+    want = _run_reference(cfg, ecfg_kwargs, n_instances, n_requests)
+    assert got == want, "a stream diverged from the failure-free run"
+
+
+def test_fleet_chaos_dense_8():
+    """Tier-1 drill: dense family, 8-instance fleet."""
+    _chaos_drill(FAMILIES["dense"], n_instances=8, n_requests=16)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fleet_chaos_all_families_12(family):
+    """The full acceptance drill: 12 instances, all three families."""
+    _chaos_drill(FAMILIES[family], n_instances=12, n_requests=24)

@@ -252,3 +252,46 @@ def test_engine_drains_after_unrecovered_failure(cfg):
     assert len(eng.done) == 6
     assert not eng.has_pending()
     assert not eng.recovery_pending()
+
+
+def test_all_instances_dead_keeps_requests_queued(cfg):
+    """Satellite regression (ISSUE 9): killing the LAST alive instance
+    must not lose or crash anything — victims park in the arrival buffer
+    (in-flight work first, in its original admission order, then the
+    drained queues), new arrivals park behind them, and the first spare
+    to rejoin admits the lot."""
+    eng = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=64),
+                     n_instances=2, seed=0)
+    reqs = _reqs(cfg, 6, out=12)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(2):
+        eng.step()
+    assert not eng.done                      # all six still in flight
+    eng.fail_instance(0)
+    eng.fail_instance(1)
+    assert eng.control.view.n_alive() == 0
+    # nothing lost, nothing crashed: instance 1's in-flight victims lead
+    # (original order — NOT reversed by the front-inserts), then instance
+    # 0's victims that had been requeued onto 1
+    assert [r.rid for r in eng.waiting] == [1, 3, 5, 0, 2, 4]
+    # stepping a dead fleet is a safe no-op, and arrivals keep parking
+    eng.step()
+    late = _reqs(cfg, 1, rid_base=6, out=12)[0]
+    eng.submit(late)
+    eng.step()
+    assert len(eng.waiting) == 7 and eng.waiting[-1].rid == 6
+    assert not eng.done
+    # first spare back -> everything admits and completes
+    eng.rejoin_instance(0)
+    assert not eng.waiting
+    eng.run(600)
+    assert len(eng.done) == 7
+    # byte-identical to a failure-free run (restarts recompute, same math)
+    ref = RealEngine(cfg, EngineConfig(max_slots=8, max_seq=64),
+                     n_instances=2, seed=0)
+    for r in _reqs(cfg, 6, out=12) + _reqs(cfg, 1, rid_base=6, out=12):
+        ref.submit(r)
+    ref.run(400)
+    want = {r.rid: r.output_tokens for r in ref.done}
+    assert {r.rid: r.output_tokens for r in eng.done} == want

@@ -19,6 +19,16 @@ Checks, per file:
     steady-state goodput (ROADMAP open item 1's exit criterion) — and the
     kevlarflow run's TPOT/TTFT sweep sections present and well-formed.
 
+``BENCH_latency.json`` (``scenario_matrix`` section, from
+``bench_failure --fleet``)
+  * a fleet of >= 8 instances, all three failure scenarios (single kill,
+    correlated 3-instance kill, storm-during-rejoin), both recovery modes;
+  * NO dropped requests in any cell — every submitted request completes
+    through every kill/rejoin/re-kill;
+  * kevlarflow strictly better than standard on average latency per
+    scenario, and at least one seamless replica promotion per kevlarflow
+    cell (otherwise replication never engaged).
+
 ``BENCH_latency.json`` (``disagg`` section, from ``--disagg``)
   * colocated vs disaggregated no-failure pairs with finite TTFT/latency
     numbers and n > 0 on both sides;
@@ -126,7 +136,71 @@ def check_latency(path: str, problems: list):
                 problems.append(
                     f"{name}: {fam}.kevlarflow.sweeps.{sweep} missing or "
                     "malformed")
+    check_scenario_matrix(name, data.get("scenario_matrix"), problems)
     check_disagg(name, data.get("disagg"), problems)
+
+
+FLEET_SCENARIOS = ("single_kill", "correlated_kill_3", "storm_during_rejoin")
+
+
+def check_scenario_matrix(name: str, matrix, problems: list):
+    """ISSUE 9 acceptance gate: the fleet scenario matrix must cover a
+    >= 8 instance fleet under all three failure scenarios in both recovery
+    modes, with no cell dropping a single request and kevlarflow strictly
+    beating standard on average latency per scenario."""
+    if not isinstance(matrix, dict):
+        problems.append(f"{name}: scenario_matrix section missing "
+                        "(run `bench_failure --fleet`)")
+        return
+    n_inst = matrix.get("n_instances")
+    if not _num(n_inst) or n_inst < 8:
+        problems.append(
+            f"{name}: scenario_matrix.n_instances {n_inst!r} < 8 — not a "
+            "fleet")
+    scenarios = matrix.get("scenarios")
+    if not isinstance(scenarios, dict):
+        problems.append(f"{name}: scenario_matrix.scenarios missing")
+        return
+    for scen in FLEET_SCENARIOS:
+        cell = scenarios.get(scen)
+        if not isinstance(cell, dict):
+            problems.append(f"{name}: scenario_matrix scenario {scen!r} "
+                            "missing")
+            continue
+        for mode in ("kevlarflow", "standard"):
+            m = cell.get(mode)
+            if not isinstance(m, dict):
+                problems.append(
+                    f"{name}: scenario_matrix.{scen}.{mode} missing")
+                continue
+            if not m.get("n"):
+                problems.append(
+                    f"{name}: scenario_matrix.{scen}.{mode} completed 0 "
+                    "requests")
+            for key in ("latency_avg", "latency_p99", "ttft_avg"):
+                if not _num(m.get(key)) or m[key] < 0:
+                    problems.append(
+                        f"{name}: scenario_matrix.{scen}.{mode}.{key} not "
+                        f"a finite non-negative number: {m.get(key)!r}")
+            dropped = m.get("dropped")
+            if not _num(dropped) or dropped != 0:
+                problems.append(
+                    f"{name}: scenario_matrix.{scen}.{mode} dropped "
+                    f"{dropped!r} request(s) — every submitted request "
+                    "must complete through the failure")
+        kf, std = cell.get("kevlarflow", {}), cell.get("standard", {})
+        if _num(kf.get("latency_avg")) and _num(std.get("latency_avg")) \
+                and not kf["latency_avg"] < std["latency_avg"]:
+            problems.append(
+                f"{name}: scenario_matrix.{scen}: kevlarflow latency_avg "
+                f"({kf['latency_avg']:.3f}) not strictly better than "
+                f"standard ({std['latency_avg']:.3f})")
+        resumed = kf.get("resumed")
+        if not _num(resumed) or resumed < 1:
+            problems.append(
+                f"{name}: scenario_matrix.{scen}.kevlarflow resumed "
+                f"{resumed!r} victims seamlessly — replica promotion "
+                "never engaged")
 
 
 def check_disagg(name: str, disagg, problems: list):
