@@ -25,17 +25,18 @@ bench-paged:
 
 # MTTR / TTFT / goodput under an injected failure, kevlarflow vs standard,
 # plus the colocated-vs-disaggregated no-failure TTFT pair and the
-# 12-instance fleet scenario matrix
+# 12-instance fleet scenario matrix (incl. the shard_degraded cell:
+# single-shard degraded serving vs whole-instance failover)
 bench-latency:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --disagg
-	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet --shard-faults
 
 # CI smoke: regenerate bench output in fast modes, then schema-check it
 bench-smoke:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_latency --tiny --disagg
-	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet --tiny
+	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_failure --fleet --tiny --shard-faults
 	PYTHONPATH=src $(PYTHON) -m benchmarks.bench_overhead --fast
 	$(MAKE) bench-check
 

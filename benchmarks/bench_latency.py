@@ -110,7 +110,9 @@ def _sweeps(engine, measured, page: int) -> Dict:
     from repro.models.paged_decode import next_bucket
 
     by_occ: Dict[int, List[float]] = {}
-    for n_active, dt in engine.step_samples:
+    # samples carry (n_active, wall_dt, capacity_frac) — the capacity
+    # fraction matters to the fleet bench, not this whole-fleet sweep
+    for n_active, dt, *_ in engine.step_samples:
         by_occ.setdefault(n_active, []).append(dt)
     tpot = {str(k): round(float(np.median(v)) * 1e3, 3)
             for k, v in sorted(by_occ.items())}

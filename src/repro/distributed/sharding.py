@@ -190,3 +190,136 @@ def cache_shardings(cache_shape, mesh: Mesh, arch_type: str):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# degraded (shard-loss) specs — FailSafe-style serving on surviving shards
+# --------------------------------------------------------------------------
+# A shard-granularity fault removes one slice of the "model" axis. Instead
+# of killing the instance, the serving layer re-lays every tensor over the
+# SURVIVING model-axis size: specs are recomputed against a mesh whose
+# model axis shrank, and the existing divisibility rules do the rest — a
+# dim the smaller axis no longer divides falls back to replication
+# (correctness over cleverness, same policy as the full mesh).
+
+def abstract_mesh(shape: Tuple[int, ...], names: Tuple[str, ...]):
+    """AbstractMesh across jax versions (>=0.5 takes (sizes, names);
+    0.4.x takes a name->size tuple) — shape-only, no devices needed."""
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(shape, names)
+    except TypeError:
+        return AM(tuple(zip(names, shape)))
+
+
+def degraded_mesh(mesh: Mesh, lost_shards) -> Mesh:
+    """The surviving mesh: ``mesh`` with its model axis shrunk by the lost
+    shard count. Raises if every shard is lost — that is instance death,
+    not degradation (the engine escalates before calling this)."""
+    lost = len(set(lost_shards))
+    sizes, names = [], []
+    for name in mesh.axis_names:
+        size = int(mesh.shape[name])
+        if name == "model":
+            size -= lost
+            if size < 1:
+                raise ValueError(
+                    f"all {mesh.shape[name]} model shards lost — no "
+                    "surviving slice to degrade onto")
+        names.append(name)
+        sizes.append(size)
+    return abstract_mesh(tuple(sizes), tuple(names))
+
+
+def degraded_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  mesh: Mesh, lost_shards, stacked_layers: bool,
+                  profile: str = "baseline") -> P:
+    """``param_spec`` re-evaluated over the surviving model-axis slice."""
+    return param_spec(path, shape, degraded_mesh(mesh, lost_shards),
+                      stacked_layers, profile)
+
+
+def degraded_params_shardings(params_shape, mesh: Mesh, lost_shards,
+                              profile: str = "baseline"):
+    return params_shardings(params_shape, degraded_mesh(mesh, lost_shards),
+                            profile)
+
+
+def degraded_cache_shardings(cache_shape, mesh: Mesh, lost_shards,
+                             arch_type: str):
+    return cache_shardings(cache_shape, degraded_mesh(mesh, lost_shards),
+                           arch_type)
+
+
+def _spec_uses_model(spec: P) -> bool:
+    for axes in spec:
+        if axes == "model" or (isinstance(axes, tuple) and "model" in axes):
+            return True
+    return False
+
+
+def degradation_summary(params_shape, mesh: Mesh, lost_shards,
+                        profile: str = "serve_model_only",
+                        cache_shape=None, arch_type: str = "") -> dict:
+    """What degrading onto the surviving slice costs, as data: how many
+    param/cache tensors stay model-sharded vs fall back to replication
+    (the smaller axis broke their divisibility), and the per-shard byte
+    growth that implies. The engine computes this once per degrade and
+    surfaces it through ``/health`` as ``degradation.layout``."""
+    surviving = degraded_mesh(mesh, lost_shards)
+    n_model = int(mesh.shape["model"])
+    n_left = int(surviving.shape["model"])
+
+    def census(tree_shape, shardings_fn, *args):
+        full = shardings_fn(tree_shape, mesh, *args)
+        deg = shardings_fn(tree_shape, surviving, *args)
+        kept = dropped = 0
+        bytes_full = bytes_deg = 0
+        leaves = zip(jax.tree_util.tree_leaves(tree_shape),
+                     jax.tree_util.tree_leaves(full),
+                     jax.tree_util.tree_leaves(deg))
+        for leaf, fsh, dsh in leaves:
+            nbytes = int(np.prod(leaf.shape)) * jnp_itemsize(leaf.dtype)
+            was = _spec_uses_model(fsh.spec)
+            now = _spec_uses_model(dsh.spec)
+            if now:
+                kept += 1
+            elif was:
+                dropped += 1
+            # per-shard residency: bytes / product of axis sizes the spec
+            # actually shards over
+            bytes_full += nbytes // max(_shard_ways(fsh.spec, mesh), 1)
+            bytes_deg += nbytes // max(_shard_ways(dsh.spec, surviving), 1)
+        return kept, dropped, bytes_full, bytes_deg
+
+    pk, pd, pbf, pbd = census(params_shape, params_shardings, profile)
+    out = {
+        "n_shards": n_model, "surviving": n_left,
+        "lost_shards": sorted(set(lost_shards)),
+        "capacity_frac": n_left / n_model,
+        "params_model_sharded": pk,
+        "params_replicate_fallback": pd,
+        "param_bytes_per_shard_full": pbf,
+        "param_bytes_per_shard_degraded": pbd,
+    }
+    if cache_shape is not None and arch_type:
+        ck, cd, cbf, cbd = census(cache_shape, cache_shardings, arch_type)
+        out.update({
+            "kv_model_sharded": ck, "kv_replicate_fallback": cd,
+            "kv_bytes_per_shard_full": cbf,
+            "kv_bytes_per_shard_degraded": cbd,
+        })
+    return out
+
+
+def _shard_ways(spec: P, mesh: Mesh) -> int:
+    ways = 1
+    for axes in spec:
+        if axes is None:
+            continue
+        ways *= axis_size(mesh, axes)
+    return ways
+
+
+def jnp_itemsize(dtype) -> int:
+    return int(np.dtype(jax.numpy.dtype(dtype)).itemsize)

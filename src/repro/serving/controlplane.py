@@ -13,9 +13,11 @@ routing implementation instead of duplicating it.
 Pieces:
 
 * ``ClusterView`` — the membership truth: which instance ids are alive,
-  and a monotone ``epoch`` that bumps on every membership change
-  (fail or rejoin). Consumers that cache topology-derived state compare
-  epochs instead of re-deriving the alive-set.
+  each instance's degradation state (``HEALTHY`` | ``DEGRADED`` with the
+  lost shard set | ``DEAD`` — a shard fault is NOT a kill), and a
+  monotone ``epoch`` that bumps on every membership OR degradation
+  change. Consumers that cache topology-derived state compare epochs
+  instead of re-deriving the alive-set.
 * ``PlacementPolicy`` — replication targeting. ``SuccessorPlacement`` is
   the classic ring (next-alive successor — the engine's historical
   behaviour, bit-for-bit). ``RendezvousPlacement`` is highest-random-
@@ -42,6 +44,8 @@ from __future__ import annotations
 import hashlib
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.serving.api_types import DEAD, DEGRADED, HEALTHY
+
 PLACEMENTS = ("successor", "rendezvous")
 
 
@@ -62,6 +66,11 @@ class ClusterView:
         # disaggregation roles (informational; routing filters on them at
         # the engine layer where the instance objects live)
         self.roles = dict(roles) if roles else {}
+        # shard-level degradation: instance id -> set of lost shard
+        # indices. A degraded instance is still ALIVE — it serves on its
+        # surviving shards — but placement deprioritizes it and routing
+        # discounts it. Death clears the record (DEAD dominates).
+        self._degraded: Dict[int, set] = {}
 
     def is_alive(self, instance_id: int) -> bool:
         return instance_id in self._alive
@@ -79,6 +88,9 @@ class ClusterView:
         if instance_id not in self._alive:
             return False
         self._alive.discard(instance_id)
+        # death supersedes degradation (the whole pool is gone); the fail
+        # epoch bump below covers the state change
+        self._degraded.pop(instance_id, None)
         self.epoch += 1
         return True
 
@@ -86,13 +98,49 @@ class ClusterView:
         if instance_id in self._alive:
             return False
         self._alive.add(instance_id)
+        self._degraded.pop(instance_id, None)   # a fresh instance is whole
         self.epoch += 1
         return True
+
+    # -- shard-level degradation ------------------------------------------
+    def mark_degraded(self, instance_id: int, shard_idx: int) -> bool:
+        """Record a shard loss. Bumps the epoch iff the (alive) instance
+        was not already missing that shard — degradation is a topology
+        change consumers must re-derive against, exactly like a death."""
+        if instance_id not in self._alive:
+            return False
+        lost = self._degraded.setdefault(instance_id, set())
+        if shard_idx in lost:
+            return False
+        lost.add(shard_idx)
+        self.epoch += 1
+        return True
+
+    def mark_restored(self, instance_id: int) -> bool:
+        """All lost shards rejoined: the instance is HEALTHY again (its
+        own epoch bump — the ring may prefer it as a target again)."""
+        if self._degraded.pop(instance_id, None) is None:
+            return False
+        self.epoch += 1
+        return True
+
+    def is_degraded(self, instance_id: int) -> bool:
+        return instance_id in self._alive and instance_id in self._degraded
+
+    def lost_shards(self, instance_id: int) -> List[int]:
+        return sorted(self._degraded.get(instance_id, ()))
+
+    def state_of(self, instance_id: int) -> str:
+        if instance_id not in self._alive:
+            return DEAD
+        return DEGRADED if instance_id in self._degraded else HEALTHY
 
     def snapshot(self) -> dict:
         return {"epoch": self.epoch, "n_instances": self.n,
                 "alive": self.alive_ids(),
-                "roles": {str(k): v for k, v in self.roles.items()}}
+                "roles": {str(k): v for k, v in self.roles.items()},
+                "degraded": {str(i): self.lost_shards(i)
+                             for i in sorted(self._degraded)}}
 
 
 class PlacementPolicy:
@@ -126,10 +174,21 @@ class SuccessorPlacement(PlacementPolicy):
     def target(self, instance_id: int, view: ClusterView) -> int:
         if view.n_alive() < 2:
             return -1
+        # ring order, healthy candidates first: a DEGRADED instance is a
+        # last-resort replica host (its surviving shards are already
+        # oversubscribed) but still a valid one — when every candidate is
+        # degraded the classic successor wins. With nothing degraded this
+        # is bit-for-bit the historical next-alive walk.
+        order = []
         idx = (instance_id + 1) % view.n
-        while not view.is_alive(idx):
+        for _ in range(view.n):
+            if idx != instance_id and view.is_alive(idx):
+                order.append(idx)
             idx = (idx + 1) % view.n
-        return idx
+        for cand in order:
+            if not view.is_degraded(cand):
+                return cand
+        return order[0]
 
 
 class RendezvousPlacement(PlacementPolicy):
@@ -155,14 +214,22 @@ class RendezvousPlacement(PlacementPolicy):
     def target(self, instance_id: int, view: ClusterView) -> int:
         if view.n_alive() < 2:
             return -1
+        # same deprioritization as the successor ring: highest weight
+        # among HEALTHY candidates, falling back to the highest-weight
+        # degraded one only when no healthy candidate exists — identical
+        # to plain rendezvous whenever nothing is degraded
         best, best_w = -1, -1
+        best_deg, best_deg_w = -1, -1
         for cand in view.alive_ids():
             if cand == instance_id:
                 continue
             w = self._weight(instance_id, cand)
-            if w > best_w:
+            if view.is_degraded(cand):
+                if w > best_deg_w:
+                    best_deg, best_deg_w = cand, w
+            elif w > best_w:
                 best, best_w = cand, w
-        return best
+        return best if best >= 0 else best_deg
 
 
 def make_placement(name: str) -> PlacementPolicy:
@@ -180,17 +247,36 @@ class LeastLoadedRouting:
     (``core/router.py``) call, so the two paths can never drift. Load is
     caller-defined (the engine counts active slots + queued depth; the
     sim counts waiting + running); ties break on instance id, which keeps
-    placement deterministic for identical loads."""
+    placement deterministic for identical loads.
+
+    Wired to a ``ClusterView`` (the engine's construction), a DEGRADED
+    candidate's load is multiplied by ``degraded_penalty`` — it serves
+    each request on fewer shards, so equal queue depth is NOT equal
+    capacity — and it loses exact ties to healthy peers. Without a view
+    (the sim LB) the ordering is unchanged."""
 
     name = "least_loaded"
 
+    def __init__(self, view: Optional[ClusterView] = None,
+                 degraded_penalty: float = 2.0):
+        self.view = view
+        self.degraded_penalty = degraded_penalty
+
+    def _key(self, cand, load: Callable[[object], int]):
+        cost = load(cand)
+        degraded = self.view is not None \
+            and self.view.is_degraded(cand.instance_id)
+        if degraded:
+            cost = cost * self.degraded_penalty
+        return (cost, 1 if degraded else 0, cand.instance_id)
+
     def pick(self, candidates: Sequence, load: Callable[[object], int]):
-        """The admission target: smallest (load, instance_id)."""
-        return min(candidates, key=lambda c: (load(c), c.instance_id))
+        """The admission target: smallest (effective load, instance_id)."""
+        return min(candidates, key=lambda c: self._key(c, load))
 
     def order(self, candidates: Sequence, load: Callable[[object], int]):
         """Candidates from least to most loaded (peer-overflow order)."""
-        return sorted(candidates, key=lambda c: (load(c), c.instance_id))
+        return sorted(candidates, key=lambda c: self._key(c, load))
 
 
 class RecoveryPlanner:
@@ -217,37 +303,63 @@ class RecoveryPlanner:
 
     def __init__(self, view: ClusterView):
         self.view = view
-        # instance_id -> {"fail_time", "ready_at"} for spares not yet back
-        self._pending: Dict[int, Dict[str, float]] = {}
+        # instance_id -> {"fail_time", "ready_at", "kind"} for recoveries
+        # not yet executed. kind "instance" = the classic spare rejoin;
+        # kind "shard" = the instance is alive-but-degraded and the lost
+        # shard(s) rejoin in place. One record per instance: a death
+        # while a shard rejoin is pending upgrades the record to
+        # "instance" (the whole pool is gone — restoring a shard of a
+        # dead instance is meaningless).
+        self._pending: Dict[int, Dict] = {}
         self.rejoins_planned = 0
         self.rejoins_completed = 0
 
     def on_failure(self, instance_id: int, t_fail: float,
-                   rejoin_at: Optional[float] = None):
-        """Record a failure; ``rejoin_at`` schedules the spare (None =
-        manual recovery — an admin rejoin clears the record)."""
+                   rejoin_at: Optional[float] = None,
+                   kind: str = "instance"):
+        """Record a failure (whole-instance or single-shard); ``rejoin_at``
+        schedules the recovery (None = manual — an admin recover clears
+        the record)."""
         prior = self._pending.get(instance_id)
         fail_time = min(prior["fail_time"], t_fail) if prior else t_fail
+        if prior is not None and "instance" in (prior["kind"], kind):
+            kind = "instance"      # death dominates a pending shard rejoin
         if rejoin_at is None and prior is None:
             self._pending[instance_id] = {"fail_time": fail_time,
-                                          "ready_at": float("inf")}
+                                          "ready_at": float("inf"),
+                                          "kind": kind}
             return
         ready = rejoin_at if rejoin_at is not None else prior["ready_at"]
         self._pending[instance_id] = {"fail_time": fail_time,
-                                      "ready_at": ready}
+                                      "ready_at": ready, "kind": kind}
         if prior is None or rejoin_at is not None:
             self.rejoins_planned += 1
 
     def cancel(self, instance_id: int):
         self._pending.pop(instance_id, None)
 
+    def pending_kind(self, instance_id: int) -> Optional[str]:
+        """"instance" | "shard" for a pending record, None otherwise —
+        the engine dispatches a due recovery on this."""
+        rec = self._pending.get(instance_id)
+        return rec["kind"] if rec else None
+
+    def _stale(self, iid: int, rec: Dict) -> bool:
+        """A record an admin already resolved by hand: an instance-kind
+        record whose instance is alive again, or a shard-kind record whose
+        instance is no longer degraded."""
+        if rec["kind"] == "shard":
+            return not self.view.is_degraded(iid)
+        return self.view.is_alive(iid)
+
     def next_due(self, t: float) -> Optional[int]:
-        """The one spare to rejoin this step (or None). Stale records —
-        an instance an admin already rejoined by hand — are dropped, not
-        returned, so a manual rejoin never collides with the schedule."""
+        """The one recovery to execute this step (or None) — instance and
+        shard rejoins share the same earliest-failure-first order. Stale
+        records — resolved by hand — are dropped, not returned, so a
+        manual recover never collides with the schedule."""
         due = []
         for iid, rec in list(self._pending.items()):
-            if self.view.is_alive(iid):
+            if self._stale(iid, rec):
                 self._pending.pop(iid)       # manually recovered
                 continue
             if t >= rec["ready_at"]:
@@ -280,10 +392,10 @@ class RecoveryPlanner:
 
     def plan(self, placement: PlacementPolicy) -> List[dict]:
         """The recovery plan as data — for /health and the runbook: each
-        down instance (scheduled or awaiting manual recovery), its rejoin
-        order, when it becomes due, and the ring target it will replicate
-        to once back (a what-if against the view with the spare marked
-        alive)."""
+        pending recovery (a down instance OR a degraded one awaiting its
+        shard rejoin), its order, when it becomes due, its granularity,
+        and the ring target the instance will replicate to once whole (a
+        what-if against the view with the instance alive and healthy)."""
         out = []
         for order, (iid, rec) in enumerate(self._ordered()):
             ready = rec["ready_at"]
@@ -293,6 +405,7 @@ class RecoveryPlanner:
             out.append({"instance": iid, "order": order,
                         "ready_at": ready if ready != float("inf") else -1.0,
                         "fail_time": rec["fail_time"],
+                        "granularity": rec["kind"],
                         "ring_target_on_rejoin": tgt})
         return out
 
@@ -306,17 +419,22 @@ class ControlPlane:
     """The bundle the engine owns: one view + one policy of each kind."""
 
     def __init__(self, n_instances: int, placement: str = "successor",
-                 roles: Optional[Dict] = None):
+                 roles: Optional[Dict] = None,
+                 degraded_load_penalty: float = 2.0):
         self.view = ClusterView(n_instances, roles=roles)
         self.placement = make_placement(placement)
-        self.routing = LeastLoadedRouting()
+        self.routing = LeastLoadedRouting(
+            view=self.view, degraded_penalty=degraded_load_penalty)
         self.planner = RecoveryPlanner(self.view)
 
     def describe(self) -> dict:
-        """The /health topology block: membership + epoch + the live
-        replication ring + the recovery plan."""
+        """The /health topology block: membership + epoch + per-instance
+        degradation states + the live replication ring + the recovery
+        plan (instance AND shard rejoins)."""
         return {
             **self.view.snapshot(),
+            "states": {str(i): self.view.state_of(i)
+                       for i in range(self.view.n)},
             "placement": self.placement.name,
             "routing": self.routing.name,
             "ring": {str(i): t

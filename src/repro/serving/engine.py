@@ -62,9 +62,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as SH
 from repro.models import api
 from repro.models import paged_decode as PD
 from repro.models.hybrid import state_blob_words
+from repro.serving.api_types import FaultSpec
 from repro.serving.controlplane import ControlPlane
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.request import Request, RequestState
@@ -142,6 +144,20 @@ class EngineConfig:
     auto_rejoin: bool = False      # schedule rejoin_instance automatically
     rejoin_delay: float = 1.0      # kevlarflow spare re-form (clock units)
     reload_penalty: float = 20.0   # standard full re-init (clock units)
+    # modeled tensor-parallel shards per instance. A shard-granularity
+    # fault (apply_fault / fail_shard) degrades the instance onto its
+    # surviving slice instead of killing it: params/KV re-lay over the
+    # smaller model axis (distributed.sharding.degraded_spec — replicate-
+    # fallback where divisibility breaks), slot capacity drops to
+    # floor(max_slots * surviving / n_shards), and the ClusterView marks
+    # it DEGRADED (its own epoch bump) so placement deprioritizes it and
+    # routing discounts it. Under "standard" recovery a shard fault
+    # escalates to whole-instance failure — degraded serving IS the
+    # kevlarflow capability.
+    n_shards: int = 4
+    # load multiplier routing applies to a DEGRADED instance (its queue
+    # drains on fewer shards, so equal depth is not equal capacity)
+    degraded_load_penalty: float = 2.0
 
 
 class FamilyExecutor:
@@ -221,6 +237,14 @@ class RealInstance:
         self.ecfg = ecfg
         self.instance_id = instance_id
         self.alive = True
+        # shard-level degradation (FailSafe-style): lost TP shard indices.
+        # A degraded instance keeps serving on the surviving slice —
+        # params/KV re-laid per sharding.degraded_spec (the layout summary
+        # lands in degraded_layout), slot capacity scaled by the surviving
+        # fraction (slot_cap), decode itself byte-identical.
+        self.n_shards = max(1, ecfg.n_shards)
+        self.lost_shards: set = set()
+        self.degraded_layout: Optional[dict] = None
         # disaggregation role: "prefill" instances run chunked prefill only
         # and hand finished prompts to the engine's handoff stream instead
         # of seating them; "decode" instances receive streamed pages and
@@ -311,8 +335,52 @@ class RealInstance:
         return self.clock() if self.clock is not None else now
 
     # -- admission -----------------------------------------------------------
+    @property
+    def slot_cap(self) -> int:
+        """Concurrent-slot capacity under the current shard set: the full
+        ``max_slots`` when whole, scaled by the surviving fraction when
+        degraded (never below 1 — a degraded instance still serves)."""
+        if not self.lost_shards:
+            return self.ecfg.max_slots
+        surviving = self.n_shards - len(self.lost_shards)
+        return max(1, (self.ecfg.max_slots * surviving) // self.n_shards)
+
+    def capacity_frac(self) -> float:
+        """Throughput cap as a fraction of the whole instance (0 dead)."""
+        if not self.alive:
+            return 0.0
+        if not self.lost_shards:
+            return 1.0
+        return (self.n_shards - len(self.lost_shards)) / self.n_shards
+
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_rid) if r < 0]
+        """Admittable slot indices, capacity-capped: a degraded instance
+        exposes only the headroom under ``slot_cap``, so every admission
+        path — queue admit, replica adoption, handoff seating — respects
+        the reduced-capacity executor without special-casing."""
+        free = [i for i, r in enumerate(self.slot_rid) if r < 0]
+        occupied = len(self.slot_rid) - len(free)
+        headroom = max(0, self.slot_cap - occupied)
+        return free[:headroom]
+
+    def degrade(self, shard_idx: int) -> List[Request]:
+        """Lose one shard: record it, shrink capacity, and hand back the
+        EXCESS in-flight requests (most-recently-seated first — the least
+        progress to lose if one must restart). The engine migrates them;
+        the pool, and every request that stays, is untouched — decode on
+        survivors is byte-identical."""
+        self.lost_shards.add(shard_idx)
+        occupied = [i for i, r in enumerate(self.slot_rid) if r >= 0]
+        excess = len(occupied) - self.slot_cap
+        if excess <= 0:
+            return []
+        return [self.requests[self.slot_rid[i]]
+                for i in occupied[-excess:]]
+
+    def restore_shards(self):
+        """Every lost shard rejoined: full spec, full capacity."""
+        self.lost_shards.clear()
+        self.degraded_layout = None
 
     def _allocate(self, rid: int, n_tokens: int, token_ids=None):
         """Allocate primary blocks (and, for hybrid, the state blob),
@@ -895,9 +963,9 @@ class RealEngine:
         # placement, least-loaded routing (shared with the sim LB), and
         # the multi-failure recovery planner. Every policy decision the
         # data-plane code below makes is delegated here.
-        self.control = ControlPlane(n_instances,
-                                    placement=self.ecfg.placement,
-                                    roles=self.roles)
+        self.control = ControlPlane(
+            n_instances, placement=self.ecfg.placement, roles=self.roles,
+            degraded_load_penalty=self.ecfg.degraded_load_penalty)
         self.instances = [
             RealInstance(cfg, self.params, self.ecfg, i,
                          executor=self.executor, clock=clock,
@@ -948,8 +1016,10 @@ class RealEngine:
         self.repl_shared_refs_total = 0
         self.repl_shared_hostings_total = 0
         self._shared_hosted_keys: set = set()   # live (target, key) pairs
-        # (n_active_slots, wall_seconds) per decode step — bench_latency
-        # aggregates these into its TPOT-vs-active-slots sweep
+        # (n_active_slots, wall_seconds, capacity_frac) per decode step —
+        # bench_latency aggregates these into its TPOT-vs-active-slots
+        # sweep; capacity_frac < 1.0 marks steps served while some
+        # instance ran degraded (shard loss caps its slots)
         self.step_samples: List[tuple] = []
 
     # -- replication traffic accounting (bench_overhead reads these) ---------
@@ -1078,7 +1148,13 @@ class RealEngine:
         # membership change re-targets the ring again
         due = self.control.planner.next_due(self.t)
         if due is not None:
-            self.rejoin_instance(due)
+            # the plan interleaves both granularities earliest-first: a
+            # shard rejoin restores the full spec in place, an instance
+            # rejoin brings back a warm spare
+            if self.control.planner.pending_kind(due) == "shard":
+                self.rejoin_shards(due)
+            else:
+                self.rejoin_instance(due)
         if self.t < self.stall_until:
             return 0       # standard recovery: group-wide weight reload
         alive = [i for i in self.instances if i.alive]
@@ -1152,7 +1228,13 @@ class RealEngine:
             self.flush_replication(block=True)
             self._complete_handoffs()
         if n_active:
-            self.step_samples.append((n_active, time.perf_counter() - _t0))
+            # third element: the fleet's serving-capacity fraction this
+            # step — degraded instances cap below max_slots, so the sweep
+            # can separate full-capacity from degraded-throughput samples
+            cap = sum(i.slot_cap for i in alive)
+            cap_frac = cap / max(len(self.instances) * self.ecfg.max_slots, 1)
+            self.step_samples.append(
+                (n_active, time.perf_counter() - _t0, cap_frac))
             if len(self.step_samples) > 20000:      # bound long-run memory
                 del self.step_samples[:10000]
         return progressed
@@ -1467,6 +1549,12 @@ class RealEngine:
             "retire_msgs_total": self.retire_msgs_total,
             "retires_per_request_step":
                 self.retire_msgs_total / max(self.active_request_steps, 1),
+            # replication load landing on degraded targets (placement
+            # deprioritizes them, so this should hover near zero)
+            "bytes_to_degraded":
+                self.transport.shipped_degraded["repl"].bytes,
+            "blocks_to_degraded":
+                self.transport.shipped_degraded["repl"].blocks,
         }
 
     def prefix_stats(self) -> dict:
@@ -1546,7 +1634,56 @@ class RealEngine:
             del self._handoffs[rid]
         return [r for r in victims if r.rid not in handled]
 
+    # -- unified fault entry points (instance- and shard-granularity) ----------
+    def apply_fault(self, spec: FaultSpec) -> Optional[List[int]]:
+        """THE fault entry point — instance kills and shard losses share
+        this one code path (the HTTP layer's ``POST /v1/admin/fault`` maps
+        straight onto it). Malformed specs raise ValueError here, before
+        any state changes; ``if_busy`` specs no-op (return None) on an
+        idle instance. Returns the rids that resumed seamlessly."""
+        spec.validate(len(self.instances), self.ecfg.n_shards)
+        if spec.if_busy and not self.instances[spec.instance_id].requests:
+            return None
+        if spec.granularity == "shard":
+            return self._apply_shard_fault(spec.instance_id, spec.shard_idx)
+        return self._apply_instance_fault(spec.instance_id)
+
+    def recover(self, spec: FaultSpec):
+        """THE recovery entry point (``POST /v1/admin/recover``): instance
+        granularity rebuilds the warm spare (``spec.shard_idx`` must be
+        None), shard granularity restores a degraded instance's lost
+        shards in place. State conflicts — rejoining an alive instance,
+        restoring a non-degraded one — raise ValueError (HTTP 409)."""
+        spec.validate(len(self.instances), self.ecfg.n_shards,
+                      for_recover=True)
+        if spec.granularity == "shard":
+            return self._recover_shards(spec.instance_id)
+        return self._recover_instance(spec.instance_id)
+
     def fail_instance(self, instance_id: int) -> List[int]:
+        """Kill a whole instance (thin wrapper over ``apply_fault``)."""
+        return self.apply_fault(
+            FaultSpec(granularity="instance", instance_id=instance_id))
+
+    def fail_shard(self, instance_id: int, shard_idx: int) -> List[int]:
+        """Lose ONE shard of an instance (thin wrapper over
+        ``apply_fault``): the instance degrades instead of dying."""
+        return self.apply_fault(
+            FaultSpec(granularity="shard", instance_id=instance_id,
+                      shard_idx=shard_idx))
+
+    def rejoin_instance(self, instance_id: int) -> RealInstance:
+        """Warm-spare rejoin (thin wrapper over ``recover``)."""
+        return self.recover(
+            FaultSpec(granularity="instance", instance_id=instance_id))
+
+    def rejoin_shards(self, instance_id: int) -> RealInstance:
+        """Restore a degraded instance's lost shards (thin wrapper over
+        ``recover``)."""
+        return self.recover(
+            FaultSpec(granularity="shard", instance_id=instance_id))
+
+    def _apply_instance_fault(self, instance_id: int) -> List[int]:
         """Kill an instance and run the configured recovery policy.
 
         kevlarflow: in-flight requests resume from the replica blocks
@@ -1584,7 +1721,8 @@ class RealEngine:
         # membership change: the view's epoch bump is what downstream
         # consumers (transport flush, placement, /health topology) key on
         self.control.view.mark_failed(instance_id)
-        event = {"instance": instance_id, "mode": self.ecfg.recovery,
+        event = {"instance": instance_id, "granularity": "instance",
+                 "shard_idx": None, "mode": self.ecfg.recovery,
                  "t_fail": self.t, "n_victims": len(victims),
                  "requeued": len(drained), "resumed": 0, "restarted": 0,
                  "t_rejoin": -1.0, "mttr": -1.0}
@@ -1649,14 +1787,146 @@ class RealEngine:
             delay = self.ecfg.reload_penalty if standard \
                 else self.ecfg.rejoin_delay
             self.control.planner.on_failure(instance_id, self.t,
-                                            rejoin_at=self.t + delay)
+                                            rejoin_at=self.t + delay,
+                                            kind="instance")
         else:
             # manual recovery: recorded (it shows in /health's plan) but
             # never scheduled — an admin rejoin_instance clears it
-            self.control.planner.on_failure(instance_id, self.t)
+            self.control.planner.on_failure(instance_id, self.t,
+                                            kind="instance")
         return resumed
 
-    def rejoin_instance(self, instance_id: int) -> RealInstance:
+    def _apply_shard_fault(self, instance_id: int,
+                           shard_idx: int) -> List[int]:
+        """Lose ONE tensor-parallel shard: the instance DEGRADES instead
+        of dying (FailSafe, paper's partial-fault premise). The surviving
+        slice keeps serving — params/KV re-lay per
+        ``sharding.degraded_spec`` (the layout summary lands on the
+        instance and in /health), slot capacity drops to the surviving
+        fraction, and only the EXCESS in-flight requests migrate (replica
+        promotion on the ring target, byte-identical; restart fallback
+        otherwise). The ClusterView marks the instance DEGRADED with its
+        own epoch bump, so placement stops preferring it as a replica
+        host and routing discounts it. Under ``standard`` recovery — or
+        when this is the LAST surviving shard — the fault escalates to
+        whole-instance failure: degraded serving is the kevlarflow
+        capability. Returns the rids that resumed seamlessly."""
+        inst = self.instances[instance_id]
+        if not inst.alive:
+            raise ValueError(
+                f"instance {instance_id} is dead — recover it at instance "
+                "granularity before injecting shard faults")
+        if shard_idx in inst.lost_shards:
+            return []      # idempotent retry (e.g. an HTTP retry)
+        if self.ecfg.recovery == "standard" or \
+                len(inst.lost_shards) + 1 >= inst.n_shards:
+            return self._apply_instance_fault(instance_id)
+        if self.clock is not None:
+            self.t = self.clock()       # admin-thread call (see above)
+        # async-replication barrier: the last step's staged deltas must
+        # land on the ring hosts before any excess victim is migrated off
+        # its promoted replica — same rule as whole-instance failover
+        self.flush_replication()
+        victims = inst.degrade(shard_idx)
+        inst.degraded_layout = self._degradation_layout(inst.lost_shards)
+        # degradation is a topology change: its own epoch bump re-derives
+        # placement (healthy-preferred ring) and routing (load discount)
+        self.control.view.mark_degraded(instance_id, shard_idx)
+        event = {"instance": instance_id, "granularity": "shard",
+                 "shard_idx": shard_idx, "mode": self.ecfg.recovery,
+                 "t_fail": self.t, "n_victims": len(victims),
+                 "requeued": 0, "resumed": 0, "restarted": 0,
+                 "t_rejoin": -1.0, "mttr": -1.0}
+        self.failure_events.append(event)
+        # in-flight handoff streams keep their parked prefill slot — the
+        # shards serving the stream survived; only seated work re-seats
+        victims = [r for r in victims if r.rid not in self._handoffs]
+        resumed: List[int] = []
+        restarted: List[Request] = []
+        for req in victims:
+            meta = self.replica_meta.pop(req.rid, None)
+            # the pool SURVIVES a shard loss: the seat frees cleanly (no
+            # lost bytes) before the request resumes elsewhere
+            inst.release(req.rid)
+            target = None
+            if meta is not None and self.instances[meta["home"]].alive:
+                target = self.instances[meta["home"]]
+            if target is not None and \
+                    target.adopt_replica(meta["peer"], req, meta):
+                resumed.append(req.rid)
+                event["resumed"] += 1
+            else:
+                if target is not None:
+                    target.pool.drop_replica(meta["peer"], req.rid)
+                req.restart()
+                req.state = RequestState.QUEUED
+                event["restarted"] += 1
+                restarted.append(req)
+        for req in reversed(restarted):
+            self._route(req, front=True)
+        if self.ecfg.auto_rejoin:
+            self.control.planner.on_failure(
+                instance_id, self.t,
+                rejoin_at=self.t + self.ecfg.rejoin_delay, kind="shard")
+        else:
+            self.control.planner.on_failure(instance_id, self.t,
+                                            kind="shard")
+        return resumed
+
+    # lazy caches for the degradation layout (one eval_shape per engine)
+    _params_struct = None
+    _cache_struct = None
+    _shard_mesh = None
+
+    def _degradation_layout(self, lost_shards) -> dict:
+        """The sharding story of serving on the surviving slice, computed
+        through the production rules in ``distributed/sharding.py``: specs
+        re-derived against a mesh whose model axis shrank to the surviving
+        shard count, replicate-fallback wherever divisibility broke."""
+        if self._shard_mesh is None:
+            self._shard_mesh = SH.abstract_mesh(
+                (1, self.ecfg.n_shards), ("data", "model"))
+            self._params_struct = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                self.params)
+            self._cache_struct = jax.eval_shape(
+                lambda: api.init_cache(self.cfg, self.ecfg.max_slots,
+                                       self.ecfg.max_seq))
+        return SH.degradation_summary(
+            self._params_struct, self._shard_mesh, lost_shards,
+            cache_shape=self._cache_struct, arch_type=self.cfg.arch_type)
+
+    def _recover_shards(self, instance_id: int) -> RealInstance:
+        """Shard rejoin: restore the full spec and full slot capacity in
+        place — nothing about the surviving-shard state changes, so every
+        request that rode out the degradation resumes byte-identically.
+        The flush barrier mirrors the fault side: the epoch bump below
+        re-targets the ring, and staged copies must land against the
+        topology they were staged under."""
+        inst = self.instances[instance_id]
+        if not inst.alive:
+            raise ValueError(
+                f"instance {instance_id} is dead — recover it at instance "
+                "granularity")
+        if not inst.lost_shards:
+            raise ValueError(f"instance {instance_id} is not degraded")
+        if self.clock is not None:
+            self.t = self.clock()
+        self.flush_replication()
+        inst.restore_shards()
+        self.control.view.mark_restored(instance_id)
+        self.control.planner.on_rejoined(instance_id, self.t)
+        # every open shard event closes: the restore brings back ALL lost
+        # shards at once
+        for event in self.failure_events:
+            if event["instance"] == instance_id and \
+                    event.get("granularity") == "shard" and \
+                    event["t_rejoin"] < 0:
+                event["t_rejoin"] = self.t
+                event["mttr"] = self.t - event["t_fail"]
+        return inst
+
+    def _recover_instance(self, instance_id: int) -> RealInstance:
         """Warm-spare rejoin (decoupled init, paper Sec 3.2 mechanism #1):
         rebuild the failed instance around the node-resident weights and the
         engine's shared compiled programs — no weight reload, no recompile —
@@ -1685,7 +1955,9 @@ class RealEngine:
             (t, k) for (t, k) in self._shared_hosted_keys
             if t != instance_id}
         for event in reversed(self.failure_events):
-            if event["instance"] == instance_id and event["t_rejoin"] < 0:
+            if event["instance"] == instance_id and \
+                    event.get("granularity", "instance") == "instance" and \
+                    event["t_rejoin"] < 0:
                 event["t_rejoin"] = self.t
                 event["mttr"] = self.t - event["t_fail"]
                 break

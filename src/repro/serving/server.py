@@ -1,7 +1,10 @@
 """OpenAI-compatible HTTP front-end (paper Sec 3.3: "providing an OpenAI-
 compatible server endpoint"). Minimal but real: a threaded stdlib HTTP
-server over RealEngine with a background engine loop, POST /v1/completions
-(+ /health and /admin/fail_instance for failure-injection drills).
+server over RealEngine with a background engine loop, POST /v1/completions,
+GET /health, and the versioned fault-injection admin API
+(``POST /v1/admin/fault`` / ``POST /v1/admin/recover`` — docs/api.md; the
+legacy ``/admin/fail_instance`` / ``/admin/rejoin_instance`` paths remain
+as deprecated aliases).
 
   PYTHONPATH=src python -m repro.serving.server --arch llama3-8b --port 8080
   curl -d '{"prompt_tokens": [1,2,3], "max_tokens": 8}' localhost:8080/v1/completions
@@ -14,6 +17,9 @@ import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro.serving.api_types import (DegradationState, FaultSpec,
+                                     HealthResponse, InstanceStatus,
+                                     TopologyBlock)
 from repro.serving.engine import EngineConfig, RealEngine
 from repro.serving.request import Request
 
@@ -88,51 +94,94 @@ class EngineService:
             time.sleep(0.005)
         return False
 
-    def fail_instance(self, instance_id: int):
+    # -- fault/admin entry points (versioned API's service layer) -------------
+    def apply_fault(self, spec: FaultSpec):
+        """One lock-held engine call per fault — instance kills and shard
+        losses both. ``spec.if_busy`` is atomic with the fault itself:
+        the busy check and the kill happen under the same lock, so a
+        drill's fault is guaranteed to land on a serving instance."""
         with self._lock:
-            return self.engine.fail_instance(instance_id)
+            return self.engine.apply_fault(spec)
+
+    def recover(self, spec: FaultSpec):
+        with self._lock:
+            return self.engine.recover(spec)
+
+    def validate_spec(self, spec: FaultSpec, for_recover: bool = False):
+        """Shape-check a spec without applying it — the HTTP layer runs
+        this first so malformed specs 400 while state conflicts 409."""
+        spec.validate(len(self.engine.instances), self.engine.ecfg.n_shards,
+                      for_recover=for_recover)
+
+    def fail_instance(self, instance_id: int):
+        return self.apply_fault(
+            FaultSpec(granularity="instance", instance_id=instance_id))
 
     def fail_instance_if_busy(self, instance_id: int):
-        """Atomically kill the instance IFF it has in-flight requests —
-        failure drills use this to guarantee the kill lands on a serving
-        instance. Returns the resumed rids, or None if it was idle."""
-        with self._lock:
-            if not self.engine.instances[instance_id].requests:
-                return None
-            return self.engine.fail_instance(instance_id)
+        """Kill the instance IFF it has in-flight requests. Returns the
+        resumed rids, or None if it was idle."""
+        return self.apply_fault(
+            FaultSpec(granularity="instance", instance_id=instance_id,
+                      if_busy=True))
 
     def rejoin_instance(self, instance_id: int):
-        with self._lock:
-            self.engine.rejoin_instance(instance_id)
+        self.recover(
+            FaultSpec(granularity="instance", instance_id=instance_id))
 
-    def stats(self):
+    def health(self) -> HealthResponse:
+        """The /health payload as its typed schema (api_types) — built
+        under the engine lock so every block is one consistent snapshot."""
         with self._lock:
             eng = self.engine
-            return {
-                "instances": [
-                    {"id": i.instance_id, "alive": i.alive,
-                     "role": i.role,
-                     "active": len(i.requests),
-                     "queued": len(eng.queues[i.instance_id]),
-                     "prefilling": i.prefill_depth(),
-                     "handoffs_ready": len(i.ready_handoffs),
-                     "pool_used_blocks": i.pool.n_used,
-                     "pool_replica_blocks": i.pool.replica_blocks_used()}
-                    for i in eng.instances],
-                "queued": eng.queue_depth(),
-                "completed": len(eng.done),
-                "recovery_mode": eng.ecfg.recovery,
-                "failure_events": [dict(e) for e in eng.failure_events],
-                "replication": eng.replication_stats(),
-                "prefix": eng.prefix_stats(),
-                "disagg": eng.disagg_stats(),
+            instances = [
+                InstanceStatus(
+                    id=i.instance_id, alive=i.alive, role=i.role,
+                    active=len(i.requests),
+                    queued=len(eng.queues[i.instance_id]),
+                    prefilling=i.prefill_depth(),
+                    handoffs_ready=len(i.ready_handoffs),
+                    pool_used_blocks=i.pool.n_used,
+                    pool_replica_blocks=i.pool.replica_blocks_used(),
+                    degradation=DegradationState(
+                        state=eng.control.view.state_of(i.instance_id),
+                        n_shards=i.n_shards,
+                        lost_shards=sorted(i.lost_shards),
+                        slot_cap=i.slot_cap if i.alive else 0,
+                        capacity_frac=i.capacity_frac(),
+                        layout=i.degraded_layout))
+                for i in eng.instances]
+            topo = eng.control.describe()
+            return HealthResponse(
+                status="ok", instances=instances,
+                queued=eng.queue_depth(), completed=len(eng.done),
+                recovery_mode=eng.ecfg.recovery,
+                failure_events=[dict(e) for e in eng.failure_events],
+                replication=eng.replication_stats(),
+                prefix=eng.prefix_stats(),
+                disagg=eng.disagg_stats(),
                 # the control plane's view of the fleet: membership epoch,
-                # placement ring, and the recovery plan — what an operator
-                # polls during a failure storm to see rejoin ordering
-                "topology": eng.control.describe(),
-            }
+                # degradation states, placement ring, and the recovery
+                # plan — what an operator polls during a failure storm
+                topology=TopologyBlock(**topo))
 
-    def shutdown(self):
+    def stats(self):
+        """Legacy dict view of /health (kept for callers predating the
+        typed schema)."""
+        return self.health().to_json()
+
+    def shutdown(self, drain_timeout: float = 0.0):
+        """Stop the engine loop; with ``drain_timeout`` > 0, let in-flight
+        generations finish first — and on timeout, say what was abandoned
+        instead of exiting silently."""
+        if drain_timeout > 0 and not self.drain(timeout=drain_timeout):
+            with self._lock:
+                eng = self.engine
+                unfinished = eng.queue_depth() + \
+                    sum(len(i.requests) for i in eng.instances)
+                parked = len(eng._handoffs)
+            print(f"shutdown: drain timed out after {drain_timeout:.0f}s — "
+                  f"{unfinished} request(s) unfinished, "
+                  f"{parked} handoff(s) parked")
         self._stop = True
         self._thread.join(timeout=2)
 
@@ -142,19 +191,61 @@ def make_handler(svc: EngineService):
         def log_message(self, *a):  # quiet
             pass
 
-        def _json(self, code: int, obj):
+        def _json(self, code: int, obj, headers=None):
             body = json.dumps(obj).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            for name, value in (headers or {}).items():
+                self.send_header(name, value)
             self.end_headers()
             self.wfile.write(body)
 
         def do_GET(self):
             if self.path == "/health":
-                self._json(200, {"status": "ok", **svc.stats()})
+                self._json(200, svc.health().to_json())
             else:
                 self._json(404, {"error": "not found"})
+
+        def _fault(self, payload, deprecated: bool = False):
+            """POST /v1/admin/fault. Shape errors (bad JSON shape, spec
+            out of range) are 400; state conflicts (shard fault on a dead
+            instance) are 409."""
+            try:
+                spec = FaultSpec.from_json(payload)
+                svc.validate_spec(spec)
+            except ValueError as e:
+                self._json(400, {"error": str(e)})
+                return
+            try:
+                resumed = svc.apply_fault(spec)
+            except ValueError as e:
+                self._json(409, {"error": str(e)})
+                return
+            self._json(200, {
+                "applied": resumed is not None,
+                "fault": spec.to_json(),
+                "seamlessly_resumed": resumed if resumed is not None else [],
+            }, headers={"Deprecation": "true"} if deprecated else None)
+
+        def _recover(self, payload, deprecated: bool = False):
+            """POST /v1/admin/recover. Shape errors are 400; state
+            conflicts (rejoining an alive instance, restoring a
+            non-degraded one) are 409."""
+            try:
+                spec = FaultSpec.from_json(payload)
+                svc.validate_spec(spec, for_recover=True)
+            except ValueError as e:
+                self._json(400, {"error": str(e)})
+                return
+            try:
+                svc.recover(spec)
+            except ValueError as e:
+                self._json(409, {"error": str(e)})
+                return
+            self._json(200, {"recovered": spec.to_json()},
+                       headers={"Deprecation": "true"} if deprecated
+                       else None)
 
         def do_POST(self):
             length = int(self.headers.get("Content-Length", 0))
@@ -190,19 +281,29 @@ def make_handler(svc: EngineService):
                     "kevlarflow": {"migrations": req.n_migrations,
                                    "retries": req.n_retries},
                 })
+            elif self.path == "/v1/admin/fault":
+                self._fault(payload)
+            elif self.path == "/v1/admin/recover":
+                self._recover(payload)
+            # deprecated aliases: same engine transition as the v1 pair
+            # (instance granularity), legacy response bodies, plus a
+            # Deprecation header — docs/api.md has the migration table
             elif self.path == "/admin/fail_instance":
                 iid = int(payload.get("instance", 0))
                 resumed = svc.fail_instance(iid)
                 self._json(200, {"failed_instance": iid,
-                                 "seamlessly_resumed": resumed})
+                                 "seamlessly_resumed": resumed},
+                           headers={"Deprecation": "true"})
             elif self.path == "/admin/rejoin_instance":
                 iid = int(payload.get("instance", 0))
                 try:
                     svc.rejoin_instance(iid)
                 except ValueError as e:
-                    self._json(409, {"error": str(e)})
+                    self._json(409, {"error": str(e)},
+                               headers={"Deprecation": "true"})
                     return
-                self._json(200, {"rejoined_instance": iid})
+                self._json(200, {"rejoined_instance": iid},
+                           headers={"Deprecation": "true"})
             else:
                 self._json(404, {"error": "not found"})
 
@@ -250,6 +351,11 @@ def main():
                          "successor (classic), or rendezvous hashing "
                          "(minimal re-host churn on membership changes — "
                          "preferred at 8+ instances)")
+    ap.add_argument("--n-shards", type=int, default=4,
+                    help="tensor-parallel shards per instance — the unit "
+                         "of shard-granularity faults (/v1/admin/fault "
+                         "with granularity=shard degrades the instance to "
+                         "its surviving slice instead of killing it)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="intern fully-covered prompt pages in a refcounted "
                          "prefix index; shared prefixes attach by reference "
@@ -271,6 +377,7 @@ def main():
                         prefix_cache=args.prefix_cache,
                         disaggregate=args.disaggregate,
                         placement=args.placement,
+                        n_shards=args.n_shards,
                         replicate=(args.recovery == "kevlarflow"))
     svc, httpd = serve(cfg, ecfg, n_instances=args.instances, port=args.port)
     print(f"KevlarFlow serving {cfg.name} on :{args.port} "
@@ -279,8 +386,9 @@ def main():
     try:
         httpd.serve_forever()
     finally:
-        svc.drain(timeout=30.0)     # let in-flight generations finish
-        svc.shutdown()
+        # let in-flight generations finish; shutdown() logs what was
+        # abandoned if the drain times out
+        svc.shutdown(drain_timeout=30.0)
 
 
 if __name__ == "__main__":

@@ -107,6 +107,11 @@ class TransportChannel:
         self.staged: Dict[str, Tally] = {k: Tally() for k in KINDS}
         self.shipped: Dict[str, Tally] = {k: Tally() for k in KINDS}
         self.dropped: Dict[str, Tally] = {k: Tally() for k in KINDS}
+        # subset of shipped: jobs whose target was serving DEGRADED at
+        # flush time (shard loss). Placement deprioritizes degraded ring
+        # targets, so this tally should stay near zero — /health surfaces
+        # it as the residual replication load a degraded instance carries
+        self.shipped_degraded: Dict[str, Tally] = {k: Tally() for k in KINDS}
 
     def stage(self, kind: str, src_id: int, dst_id: int, blocks, blobs,
               shared_copies: int = 0, on_shipped=None) -> dict:
@@ -145,6 +150,8 @@ class TransportChannel:
             src.pool.copy_blocks_to(dst.pool, *msg["blocks"])
             src.pool.copy_blobs_to(dst.pool, *msg["blobs"])
             self.shipped[msg["kind"]].add(msg)
+            if self.view is not None and self.view.is_degraded(msg["dst"]):
+                self.shipped_degraded[msg["kind"]].add(msg)
             if msg["on_shipped"] is not None:
                 msg["on_shipped"]()
             shipped.append(dst)

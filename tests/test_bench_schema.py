@@ -45,12 +45,24 @@ def _fleet_cell(lat, resumed=5, dropped=0):
             "restarted": 1, "epoch_final": 2}
 
 
+def _shard_mode(lat, engaged=False):
+    m = _fleet_cell(lat, resumed=1)
+    m["healed"] = True
+    if engaged:
+        m["degraded_engaged"] = True
+        m["capacity_min"] = 0.97
+    return m
+
+
 def _valid_matrix():
     scen = {s: {"kevlarflow": _fleet_cell(8.0),
                 "standard": _fleet_cell(30.0, resumed=0),
                 "latency_ratio_x": 3.75}
             for s in ("single_kill", "correlated_kill_3",
                       "storm_during_rejoin")}
+    scen["shard_degraded"] = {"degraded": _shard_mode(6.0, engaged=True),
+                              "instance_failover": _shard_mode(7.0),
+                              "latency_ratio_x": 1.17}
     return {"profile": "tiny", "n_instances": 8, "arch": "llama3-8b",
             "placement": "rendezvous", "clock": "ticks", "scenarios": scen}
 
@@ -231,6 +243,36 @@ def test_scenario_matrix_ordering_gated(tmp_path):
     payload["scenario_matrix"]["scenarios"]["single_kill"]["kevlarflow"][
         "resumed"] = 0
     assert any("replica promotion" in p for p in _check(tmp_path, payload))
+
+
+def test_shard_degraded_cell_gated(tmp_path):
+    """ISSUE 10 bar: the shard_degraded cell must exist, drop nothing,
+    actually engage degraded serving, heal, and beat whole-instance
+    failover on avg latency strictly."""
+    payload = _valid_latency()
+    del payload["scenario_matrix"]["scenarios"]["shard_degraded"]
+    assert any("shard_degraded cell missing" in p
+               for p in _check(tmp_path, payload))
+    cell = _valid_latency()["scenario_matrix"]["scenarios"]["shard_degraded"]
+
+    def with_cell(mutate):
+        payload = _valid_latency()
+        mutate(payload["scenario_matrix"]["scenarios"]["shard_degraded"])
+        return _check(tmp_path, payload)
+
+    assert cell["degraded"]["latency_avg"] < \
+        cell["instance_failover"]["latency_avg"]
+    probs = with_cell(lambda c: c["degraded"].update(latency_avg=7.0))
+    assert any("not strictly better" in p and "shard_degraded" in p
+               for p in probs)
+    probs = with_cell(lambda c: c["degraded"].update(dropped=1))
+    assert any("must not shed load" in p for p in probs)
+    probs = with_cell(lambda c: c["degraded"].pop("degraded_engaged"))
+    assert any("escalated instead of degrading" in p for p in probs)
+    probs = with_cell(lambda c: c["degraded"].update(capacity_min=1.0))
+    assert any("capacity_min" in p for p in probs)
+    probs = with_cell(lambda c: c["instance_failover"].update(healed=False))
+    assert any("did not heal" in p for p in probs)
 
 
 def _valid_prefix():

@@ -43,7 +43,8 @@ def test_view_snapshot_shape():
     view.mark_failed(1)
     snap = view.snapshot()
     assert snap == {"epoch": 1, "n_instances": 3, "alive": [0, 2],
-                    "roles": {"0": "prefill", "1": "decode", "2": "decode"}}
+                    "roles": {"0": "prefill", "1": "decode", "2": "decode"},
+                    "degraded": {}}
 
 
 # -- placement --------------------------------------------------------------

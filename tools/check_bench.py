@@ -201,6 +201,65 @@ def check_scenario_matrix(name: str, matrix, problems: list):
                 f"{name}: scenario_matrix.{scen}.kevlarflow resumed "
                 f"{resumed!r} victims seamlessly — replica promotion "
                 "never engaged")
+    check_shard_degraded(name, scenarios.get("shard_degraded"), problems)
+
+
+def check_shard_degraded(name: str, cell, problems: list):
+    """ISSUE 10 acceptance gate: the shard_degraded cell pits a single-
+    shard fault (degraded serving on the surviving slice) against the
+    whole-instance kill on the same loaded fleet. Both sides must drop
+    nothing; the degraded run must have actually engaged (shard-granularity
+    event, capacity dip) and healed back to a fully HEALTHY fleet; and
+    absorbing the partial fault must be STRICTLY cheaper on average latency
+    than escalating it to failover."""
+    if not isinstance(cell, dict):
+        problems.append(f"{name}: scenario_matrix.shard_degraded cell "
+                        "missing (run `bench_failure --fleet "
+                        "--shard-faults`)")
+        return
+    for mode in ("degraded", "instance_failover"):
+        m = cell.get(mode)
+        if not isinstance(m, dict):
+            problems.append(
+                f"{name}: scenario_matrix.shard_degraded.{mode} missing")
+            continue
+        if not m.get("n"):
+            problems.append(
+                f"{name}: scenario_matrix.shard_degraded.{mode} completed "
+                "0 requests")
+        for key in ("latency_avg", "latency_p99", "ttft_avg"):
+            if not _num(m.get(key)) or m[key] < 0:
+                problems.append(
+                    f"{name}: scenario_matrix.shard_degraded.{mode}.{key} "
+                    f"not a finite non-negative number: {m.get(key)!r}")
+        dropped = m.get("dropped")
+        if not _num(dropped) or dropped != 0:
+            problems.append(
+                f"{name}: scenario_matrix.shard_degraded.{mode} dropped "
+                f"{dropped!r} request(s) — degraded serving must not shed "
+                "load")
+        if m.get("healed") is not True:
+            problems.append(
+                f"{name}: scenario_matrix.shard_degraded.{mode} did not "
+                "heal back to a fully HEALTHY fleet")
+    deg, inst = cell.get("degraded", {}), cell.get("instance_failover", {})
+    if deg.get("degraded_engaged") is not True:
+        problems.append(
+            f"{name}: scenario_matrix.shard_degraded.degraded never "
+            "recorded a shard-granularity event — the fault escalated "
+            "instead of degrading")
+    cap = deg.get("capacity_min")
+    if not _num(cap) or not 0 < cap < 1.0:
+        problems.append(
+            f"{name}: scenario_matrix.shard_degraded.degraded.capacity_min "
+            f"{cap!r} not in (0, 1) — the capacity cap never showed up in "
+            "step samples")
+    if _num(deg.get("latency_avg")) and _num(inst.get("latency_avg")) \
+            and not deg["latency_avg"] < inst["latency_avg"]:
+        problems.append(
+            f"{name}: scenario_matrix.shard_degraded: degraded latency_avg "
+            f"({deg['latency_avg']:.3f}) not strictly better than whole-"
+            f"instance failover ({inst['latency_avg']:.3f})")
 
 
 def check_disagg(name: str, disagg, problems: list):
